@@ -1,0 +1,66 @@
+"""Fig. 1b/1c reproduction: intelligent-router variants vs heuristics.
+
+Trains baseline / workload-aware / workload-guided RL routers (short
+schedule sized for CPU) and evaluates all policies on held-out episodes:
+end-to-end latency, TTFT, router wait, preemptions."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, timed
+from repro.core import rl_router as rl
+from repro.core.policies import make_policy
+from repro.core.profiles import V100_LLAMA2_7B
+from repro.core.simulator import Cluster, run_heuristic
+from repro.core.workload import generate, to_requests
+
+PROF = V100_LLAMA2_7B
+N, RATE, M = 400, 20.0, 4
+EPISODES = 12
+EVAL_SEEDS = (991, 992, 993)
+
+
+def _reqs(seed):
+    return to_requests(generate(N, seed=seed), rate=RATE, seed=seed + 5000)
+
+
+def eval_policy(fn):
+    stats = [fn(_reqs(sd)) for sd in EVAL_SEEDS]
+    keys = ("e2e_mean", "ttft_mean", "tbt_mean", "preemptions")
+    return {k: float(np.mean([s[k] for s in stats])) for k in keys}
+
+
+def main():
+    rows = {}
+    with timed() as t:
+        for name in ("round_robin", "jsq", "max_capacity", "min_min",
+                     "decode_balancer", "impact_greedy"):
+            rows[name] = eval_policy(
+                lambda r, n=name: run_heuristic(
+                    Cluster(PROF, M), r, make_policy(n, PROF)))
+        for variant in ("baseline", "aware", "guided"):
+            cfg = rl.RouterConfig(variant=variant, n_instances=M,
+                                  explore_episodes=8, seed=0,
+                                  q_arch="decomposed")
+            out = rl.train(cfg, PROF,
+                           lambda ep: _reqs(100 + ep), EPISODES,
+                           valid_fn=lambda: _reqs(555))
+            rows[f"rl_{variant}"] = eval_policy(
+                lambda r, c=cfg, a=out["agent"]: rl.evaluate(c, PROF, a, r))
+    rr = rows["round_robin"]["e2e_mean"]
+    per = t["us"] / len(rows)
+    for name, row in rows.items():
+        gain = (rr - row["e2e_mean"]) / rr * 100
+        emit(f"fig1b_{name}_e2e_s", per,
+             f"{row['e2e_mean']:.2f}({gain:+.1f}%vsRR)")
+        emit(f"fig1c_{name}_ttft_s", per, f"{row['ttft_mean']:.2f}")
+    # the guided variant must be the best RL variant (paper ordering) and
+    # competitive with round robin
+    assert rows["rl_guided"]["e2e_mean"] <= \
+        min(rows["rl_baseline"]["e2e_mean"],
+            rows["rl_aware"]["e2e_mean"]) + 1e-6
+    assert rows["rl_guided"]["e2e_mean"] <= rr * 1.15
+
+
+if __name__ == "__main__":
+    main()

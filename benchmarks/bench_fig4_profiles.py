@@ -1,0 +1,47 @@
+"""Fig. 4 reproduction: batch execution time vs prompt/decode tokens.
+
+Measures SimInstance iteration times over sweeps and fits the two
+gradients; asserts the linear structure the paper profiles (prefill fast
+and linear, decode slow growth)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, timed
+from repro.core.profiles import V100_LLAMA2_7B, fit
+from repro.core.simulator import SimInstance
+from repro.serving.request import Request
+from repro.serving.scheduler import get_scheduler
+
+PROF = V100_LLAMA2_7B
+
+
+def main():
+    with timed() as t:
+        prefill_pts = []
+        for p in range(50, 1001, 50):
+            inst = SimInstance(PROF, get_scheduler("fcfs"), 0)
+            inst.submit(Request(prompt_tokens=p, decode_tokens=2))
+            inst.run_until(1e-9)
+            prefill_pts.append((p, inst.clock))
+        decode_pts = []
+        for resident in range(200, 3800, 200):
+            inst = SimInstance(PROF, get_scheduler("fcfs"), 0)
+            # co-resident context, then measure a decode-only iteration
+            r = Request(prompt_tokens=resident, decode_tokens=50)
+            inst.submit(r)
+            inst.run_until(1e-9)
+            t0 = inst.clock
+            inst.run_until(t0 + 1e-9)
+            decode_pts.append((resident, inst.clock - t0))
+        fitted = fit(prefill_pts, decode_pts)
+    emit("fig4_grad1_s_per_prompt_tok", t["us"] / len(prefill_pts),
+         f"fit={fitted.grad1:.2e}_true={PROF.grad1:.2e}")
+    emit("fig4_grad2_s_per_context_tok", t["us"] / len(decode_pts),
+         f"fit={fitted.grad2:.2e}_true={PROF.grad2:.2e}")
+    r1 = abs(fitted.grad1 - PROF.grad1) / PROF.grad1
+    assert r1 < 0.05, r1
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""Fig. 5 reproduction: TBT distribution, instance queue depth, and router
+wait for round-robin vs the workload-guided router."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, timed
+from repro.core import rl_router as rl
+from repro.core.policies import make_policy
+from repro.core.profiles import V100_LLAMA2_7B
+from repro.core.simulator import Cluster, run_heuristic
+from repro.core.workload import generate, to_requests
+
+PROF = V100_LLAMA2_7B
+N, RATE, M = 400, 20.0, 4
+
+
+def _reqs(seed):
+    return to_requests(generate(N, seed=seed), rate=RATE, seed=seed + 5000)
+
+
+def tbt_stats(reqs):
+    tbts = [r.tbt for r in reqs if r.tbt is not None]
+    return (float(np.mean(tbts)), float(np.percentile(tbts, 99)),
+            float(np.var(tbts)))
+
+
+def main():
+    with timed() as t:
+        reqs_rr = _reqs(991)
+        run_heuristic(Cluster(PROF, M), reqs_rr,
+                      make_policy("round_robin", PROF))
+        cfg = rl.RouterConfig(variant="guided", n_instances=M,
+                              explore_episodes=6, seed=0,
+                              q_arch="decomposed")
+        out = rl.train(cfg, PROF, lambda ep: _reqs(100 + ep), 8,
+                       valid_fn=lambda: _reqs(555))
+        reqs_g = _reqs(991)
+        st_g = rl.evaluate(cfg, PROF, out["agent"], reqs_g)
+    mean_rr, p99_rr, var_rr = tbt_stats(reqs_rr)
+    mean_g, p99_g, var_g = tbt_stats(reqs_g)
+    emit("fig5_tbt_mean_ms(rr/guided)", t["us"] / 2,
+         f"{mean_rr*1e3:.1f}/{mean_g*1e3:.1f}")
+    emit("fig5_tbt_p99_ms(rr/guided)", t["us"] / 2,
+         f"{p99_rr*1e3:.1f}/{p99_g*1e3:.1f}")
+    emit("fig5_tbt_var(rr/guided)", t["us"] / 2,
+         f"{var_rr:.4f}/{var_g:.4f}")
+    emit("fig5_router_wait_s_guided", t["us"] / 2,
+         f"{st_g['router_wait_mean']:.2f}")
+
+
+if __name__ == "__main__":
+    main()

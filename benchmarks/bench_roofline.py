@@ -1,0 +1,34 @@
+"""Roofline summary: reads the dry-run artifacts and prints the per-cell
+three-term roofline table (§Roofline deliverable)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import emit
+
+
+def main():
+    base = os.environ.get("DRYRUN_DIR", "artifacts/dryrun/single")
+    files = sorted(glob.glob(os.path.join(base, "*.json")))
+    if not files:
+        emit("roofline_missing_artifacts", 0.0,
+             "run_python_-m_repro.launch.dryrun_--all_first")
+        return
+    for f in files:
+        d = json.load(open(f))
+        if "skipped" in d:
+            continue
+        name = f"{d['arch']}__{d['shape']}"
+        dom = d["dominant"].replace("_s", "")
+        frac = d["useful_flop_ratio"]
+        emit(f"roofline_{name}",
+             d.get("compile_s", 0) * 1e6,
+             f"c={d['compute_s']*1e3:.2f}ms_m={d['memory_s']*1e3:.2f}ms_"
+             f"x={d['collective_s']*1e3:.2f}ms_dom={dom}_"
+             f"useful={frac:.2f}_peak={d['peak_bytes_per_device']/2**30:.1f}GiB")
+
+
+if __name__ == "__main__":
+    main()

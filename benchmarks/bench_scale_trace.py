@@ -1,0 +1,72 @@
+"""§A.11 (8-instance scalability) + §A.12 (production-trace workload with
+the content-free length predictor)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, timed
+from repro.core import predictor as pred
+from repro.core import rl_router as rl
+from repro.core.policies import make_policy
+from repro.core.profiles import A100_LLAMA31_8B, V100_LLAMA2_7B
+from repro.core.simulator import Cluster, run_heuristic
+from repro.core.workload import (TRACE_APPS, generate, generate_trace,
+                                 to_requests)
+from repro.serving.request import Request
+
+
+def main():
+    # --- A.11: 8 instances, doubled load -------------------------------
+    prof = V100_LLAMA2_7B
+    with timed() as t:
+        def reqs8(seed):
+            return to_requests(generate(600, seed=seed), rate=40.0,
+                               seed=seed + 1)
+        rr = run_heuristic(Cluster(prof, 8), reqs8(991),
+                           make_policy("round_robin", prof))
+        cfg = rl.RouterConfig(variant="guided", n_instances=8,
+                              explore_episodes=5, seed=0,
+                              q_arch="decomposed")
+        out = rl.train(cfg, prof, lambda ep: reqs8(100 + ep), 7,
+                       valid_fn=lambda: reqs8(555))
+        st = rl.evaluate(cfg, prof, out["agent"], reqs8(991))
+    gain = (rr["e2e_mean"] - st["e2e_mean"]) / rr["e2e_mean"] * 100
+    emit("a11_8inst_rr_e2e_s", t["us"] / 2, f"{rr['e2e_mean']:.2f}")
+    emit("a11_8inst_guided_e2e_s", t["us"] / 2,
+         f"{st['e2e_mean']:.2f}({gain:+.1f}%)")
+
+    # --- A.12: production trace + content-free predictor ----------------
+    prof = A100_LLAMA31_8B
+    with timed() as t:
+        train = generate_trace(3000, seed=1)
+        test = generate_trace(800, seed=2)
+        tp = pred.TracePredictor(prof, n_apps=len(TRACE_APPS))
+        tp.fit(train, epochs=80)
+        acc = tp.accuracy(test)
+
+        def trace_reqs(seed):
+            samples = generate_trace(500, seed=seed)
+            rng = np.random.default_rng(seed + 9)
+            arr = np.cumsum(rng.exponential(1 / 40.0, len(samples)))
+            return [Request(prompt_tokens=s.prompt_tokens,
+                            decode_tokens=s.decode_tokens,
+                            arrival=float(a), task=s.task)
+                    for s, a in zip(samples, arr)]
+        rr = run_heuristic(Cluster(prof, 4), trace_reqs(991),
+                           make_policy("round_robin", prof))
+        cfg = rl.RouterConfig(variant="guided", n_instances=4,
+                              explore_episodes=5, seed=0,
+                              q_arch="decomposed")
+        out = rl.train(cfg, prof, lambda ep: trace_reqs(100 + ep), 7,
+                       valid_fn=lambda: trace_reqs(555))
+        st = rl.evaluate(cfg, prof, out["agent"], trace_reqs(991))
+    gain = (rr["e2e_mean"] - st["e2e_mean"]) / rr["e2e_mean"] * 100
+    emit("a12_trace_predictor_acc", t["us"] / 3, f"{acc:.3f}")
+    emit("a12_trace_rr_e2e_s", t["us"] / 3, f"{rr['e2e_mean']:.2f}")
+    emit("a12_trace_guided_e2e_s", t["us"] / 3,
+         f"{st['e2e_mean']:.2f}({gain:+.1f}%)")
+    assert acc > 0.4
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,22 @@
+"""Shared benchmark helpers."""
+from __future__ import annotations
+
+import time
+from contextlib import contextmanager
+
+ROWS = []
+
+
+def emit(name: str, us_per_call: float, derived: str):
+    row = f"{name},{us_per_call:.1f},{derived}"
+    ROWS.append(row)
+    print(row, flush=True)
+
+
+@contextmanager
+def timed():
+    t0 = time.time()
+    box = {}
+    yield box
+    box["s"] = time.time() - t0
+    box["us"] = (time.time() - t0) * 1e6

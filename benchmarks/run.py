@@ -1,0 +1,48 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.
+
+  PYTHONPATH=src python -m benchmarks.run            # all
+  PYTHONPATH=src python -m benchmarks.run fig1b ...  # subset
+"""
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+MODULES = [
+    ("fig4", "benchmarks.bench_fig4_profiles"),
+    ("fig2", "benchmarks.bench_fig2_partition"),
+    ("table2", "benchmarks.bench_table2_grid"),
+    ("table1", "benchmarks.bench_table1_predictor"),
+    ("fig1b", "benchmarks.bench_fig1b_rl"),
+    ("fig5", "benchmarks.bench_fig5_metrics"),
+    ("table3", "benchmarks.bench_table3_chunking"),
+    ("scale_trace", "benchmarks.bench_scale_trace"),
+    ("roofline", "benchmarks.bench_roofline"),
+]
+
+
+def main() -> None:
+    only = set(sys.argv[1:])
+    print("name,us_per_call,derived")
+    failures = []
+    for key, mod_name in MODULES:
+        if only and key not in only:
+            continue
+        t0 = time.time()
+        try:
+            mod = __import__(mod_name, fromlist=["main"])
+            mod.main()
+            print(f"# {key} ok in {time.time()-t0:.1f}s", flush=True)
+        except Exception as e:
+            traceback.print_exc()
+            failures.append((key, repr(e)))
+    if failures:
+        print("# FAILURES:", failures)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,39 @@
+"""Train the workload-guided RL router (paper §5.3/§6) in the calibrated
+cluster simulator and compare against round-robin + heuristics.
+
+  PYTHONPATH=src python examples/train_router_rl.py [n_episodes]
+"""
+import sys
+
+import numpy as np
+
+from repro.core import rl_router as rl
+from repro.core.policies import make_policy
+from repro.core.profiles import V100_LLAMA2_7B
+from repro.core.simulator import Cluster, run_heuristic
+from repro.core.workload import generate, to_requests
+
+PROF = V100_LLAMA2_7B
+N, RATE, M = 400, 20.0, 4
+
+
+def reqs(seed):
+    return to_requests(generate(N, seed=seed), rate=RATE, seed=seed + 5000)
+
+
+if __name__ == "__main__":
+    episodes = int(sys.argv[1]) if len(sys.argv) > 1 else 12
+    for name in ("round_robin", "jsq", "impact_greedy"):
+        st = run_heuristic(Cluster(PROF, M), reqs(991),
+                           make_policy(name, PROF))
+        print(f"{name:16s} e2e={st['e2e_mean']:7.2f}s "
+              f"ttft={st['ttft_mean']:6.2f}s preempt={st['preemptions']}")
+    cfg = rl.RouterConfig(variant="guided", n_instances=M,
+                          explore_episodes=max(episodes - 4, 2),
+                          q_arch="decomposed", seed=0)
+    out = rl.train(cfg, PROF, lambda ep: reqs(100 + ep), episodes,
+                   valid_fn=lambda: reqs(555), verbose=True)
+    st = rl.evaluate(cfg, PROF, out["agent"], reqs(991))
+    print(f"{'rl_guided':16s} e2e={st['e2e_mean']:7.2f}s "
+          f"ttft={st['ttft_mean']:6.2f}s preempt={st['preemptions']} "
+          f"router_wait={st['router_wait_mean']:.2f}s")

@@ -1,0 +1,230 @@
+"""Double DQN in pure JAX (paper §A.9.3): MLP (state,64),(64,64),(64,m+1),
+ReLU, replay buffer, target network, masked epsilon-greedy."""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class DQNConfig:
+    state_dim: int
+    n_actions: int
+    hidden: Tuple[int, ...] = (64, 64)
+    gamma: float = 0.99
+    lr: float = 1e-3
+    batch_size: int = 512
+    buffer_size: int = 200_000
+    tau: float = 0.005              # polyak target averaging per learn step
+    huber_delta: float = 1.0
+    # average-reward centering: the routing MDP carries a large
+    # action-independent per-step backlog penalty; centering rewards by a
+    # running mean (differential Q-learning) removes the constant component
+    # so the TD signal is dominated by action ADVANTAGES.
+    center_rewards: bool = True
+    center_beta: float = 0.005
+    # q_arch "mlp": the paper's fixed-m MLP (27ish,64),(64,64),(64,m+1).
+    # q_arch "decomposed": beyond-paper permutation-equivariant network --
+    # a shared trunk scores each instance from (instance block, router
+    # block); defer is scored from the pooled embedding.  Equivariance
+    # removes the all-to-one-instance greedy degeneracy and lets m change
+    # at runtime (elastic scaling).
+    q_arch: str = "mlp"
+    inst_dims: int = 0
+    router_dims: int = 0
+
+
+def init_mlp(key, dims) -> Dict:
+    params = {}
+    for i, (a, b) in enumerate(zip(dims[:-1], dims[1:])):
+        key, k1 = jax.random.split(key)
+        params[f"w{i}"] = jax.random.normal(k1, (a, b)) * np.sqrt(2.0 / a)
+        params[f"b{i}"] = jnp.zeros((b,))
+    return params
+
+
+def mlp(params: Dict, x: jax.Array) -> jax.Array:
+    n = len(params) // 2
+    for i in range(n):
+        x = x @ params[f"w{i}"] + params[f"b{i}"]
+        if i < n - 1:
+            x = jax.nn.relu(x)
+    return x
+
+
+def init_q(key, cfg: DQNConfig) -> Dict:
+    if cfg.q_arch == "mlp":
+        dims = (cfg.state_dim,) + cfg.hidden + (cfg.n_actions,)
+        return init_mlp(key, dims)
+    k1, k2, k3 = jax.random.split(key, 3)
+    h = cfg.hidden[0]
+    return {
+        "trunk": init_mlp(k1, (cfg.inst_dims + cfg.router_dims, h, h)),
+        "route_head": init_mlp(k2, (h, 1)),
+        "defer_head": init_mlp(k3, (h + cfg.router_dims, h, 1)),
+    }
+
+
+def apply_q(cfg: DQNConfig, params: Dict, x: jax.Array) -> jax.Array:
+    """x [batch, state_dim] -> q [batch, n_actions] (last action = defer)."""
+    if cfg.q_arch == "mlp":
+        return mlp(params, x)
+    b = x.shape[0]
+    n_inst = (x.shape[-1] - cfg.router_dims) // cfg.inst_dims
+    inst = x[:, :n_inst * cfg.inst_dims].reshape(b, n_inst, cfg.inst_dims)
+    router = x[:, n_inst * cfg.inst_dims:]
+    router_b = jnp.broadcast_to(router[:, None],
+                                (b, n_inst, cfg.router_dims))
+    h = mlp(params["trunk"], jnp.concatenate([inst, router_b], -1))
+    h = jax.nn.relu(h)
+    q_route = mlp(params["route_head"], h)[..., 0]        # [b, n_inst]
+    pooled = jnp.mean(h, axis=1)
+    q_defer = mlp(params["defer_head"],
+                  jnp.concatenate([pooled, router], -1))  # [b,1]
+    return jnp.concatenate([q_route, q_defer], axis=-1)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def q_values(cfg: DQNConfig, params: Dict, state: jax.Array) -> jax.Array:
+    return apply_q(cfg, params, state)
+
+
+def _huber(x, delta):
+    a = jnp.abs(x)
+    return jnp.where(a <= delta, 0.5 * x * x, delta * (a - 0.5 * delta))
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",), donate_argnums=(1, 2))
+def train_batch(cfg: DQNConfig, params: Dict, opt: Dict, target: Dict,
+                batch: Dict) -> Tuple[Dict, Dict, jax.Array]:
+    """One Adam step on the double-DQN TD loss."""
+    s, a, r, s2, done, mask2 = (batch["s"], batch["a"], batch["r"],
+                                batch["s2"], batch["done"], batch["mask2"])
+
+    def loss_fn(p):
+        q = apply_q(cfg, p, s)
+        q_sa = jnp.take_along_axis(q, a[:, None], axis=1)[:, 0]
+        q2_online = apply_q(cfg, p, s2)
+        q2_online = jnp.where(mask2, q2_online, -1e9)
+        a_star = jnp.argmax(q2_online, axis=1)
+        q2_target = apply_q(cfg, target, s2)
+        q2 = jnp.take_along_axis(q2_target, a_star[:, None], axis=1)[:, 0]
+        y = r + cfg.gamma * (1.0 - done) * q2
+        return jnp.mean(_huber(q_sa - jax.lax.stop_gradient(y),
+                               cfg.huber_delta))
+
+    loss, grads = jax.value_and_grad(loss_fn)(params)
+    # inline Adam (pytree-generic)
+    step = opt["step"] + 1
+    b1, b2, eps = 0.9, 0.999, 1e-8
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+    new_m = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g,
+                         opt["m"], grads)
+    new_v = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * g * g,
+                         opt["v"], grads)
+    new_p = jax.tree.map(
+        lambda p, m, v: p - cfg.lr * (m / bc1) / (jnp.sqrt(v / bc2) + eps),
+        params, new_m, new_v)
+    return new_p, {"m": new_m, "v": new_v, "step": step}, loss
+
+
+class ReplayBuffer:
+    def __init__(self, cfg: DQNConfig):
+        n, d, a = cfg.buffer_size, cfg.state_dim, cfg.n_actions
+        self.s = np.zeros((n, d), np.float32)
+        self.a = np.zeros((n,), np.int32)
+        self.r = np.zeros((n,), np.float32)
+        self.s2 = np.zeros((n, d), np.float32)
+        self.done = np.zeros((n,), np.float32)
+        self.mask2 = np.zeros((n, a), bool)
+        self.size = 0
+        self.ptr = 0
+        self.cap = n
+
+    def add(self, s, a, r, s2, done, mask2):
+        i = self.ptr
+        self.s[i], self.a[i], self.r[i] = s, a, r
+        self.s2[i], self.done[i], self.mask2[i] = s2, done, mask2
+        self.ptr = (i + 1) % self.cap
+        self.size = min(self.size + 1, self.cap)
+
+    def sample(self, rng: np.random.Generator, batch: int) -> Dict:
+        idx = rng.integers(0, self.size, size=batch)
+        return {"s": self.s[idx], "a": self.a[idx], "r": self.r[idx],
+                "s2": self.s2[idx], "done": self.done[idx],
+                "mask2": self.mask2[idx]}
+
+
+class DQNAgent:
+    def __init__(self, cfg: DQNConfig, seed: int = 0):
+        self.cfg = cfg
+        key = jax.random.PRNGKey(seed)
+        self.params = init_q(key, cfg)
+        self.target = jax.tree.map(jnp.copy, self.params)
+        self.opt = {"m": jax.tree.map(jnp.zeros_like, self.params),
+                    "v": jax.tree.map(jnp.zeros_like, self.params),
+                    "step": jnp.zeros((), jnp.int32)}
+        self.buffer = ReplayBuffer(cfg)
+        self.rng = np.random.default_rng(seed)
+        self.steps = 0
+        self.r_mean = 0.0
+        self._r_init = False
+
+    def act(self, state: np.ndarray, mask: np.ndarray,
+            epsilon: float = 0.0,
+            prior: Optional[np.ndarray] = None,
+            q_squash: float = 0.0) -> int:
+        """Masked epsilon-greedy; ``prior`` is an optional per-action bonus
+        added to Q at selection time (decision-time guidance).  q_squash>0
+        bounds Q's influence to +-q_squash (advantages tanh-squashed), so a
+        strong prior cannot be overruled by unbounded value noise."""
+        valid = np.flatnonzero(mask)
+        if epsilon > 0 and self.rng.random() < epsilon:
+            return int(self.rng.choice(valid))
+        q = np.array(q_values(self.cfg, self.params,
+                              jnp.asarray(state[None])))[0]
+        if q_squash > 0:
+            ref = np.max(q[mask]) if mask.any() else 0.0
+            q = q_squash * np.tanh(q - ref)
+        if prior is not None:
+            q = q + prior
+        q[~mask] = -np.inf
+        return int(np.argmax(q))
+
+    def observe(self, s, a, r, s2, done, mask2):
+        if self.cfg.center_rewards:
+            if not self._r_init:
+                self.r_mean, self._r_init = float(r), True
+            else:
+                self.r_mean += self.cfg.center_beta * (r - self.r_mean)
+            r = r - self.r_mean
+        self.buffer.add(s, a, r, s2, done, mask2)
+
+    def learn(self) -> Optional[float]:
+        if self.buffer.size < self.cfg.batch_size:
+            return None
+        batch = {k: jnp.asarray(v) for k, v in
+                 self.buffer.sample(self.rng, self.cfg.batch_size).items()}
+        self.params, self.opt, loss = train_batch(
+            self.cfg, self.params, self.opt, self.target, batch)
+        self.steps += 1
+        tau = self.cfg.tau
+        self.target = jax.tree.map(
+            lambda t, p: (1.0 - tau) * t + tau * p, self.target,
+            self.params)
+        return float(loss)
+
+    # checkpointable state (router fault tolerance)
+    def state_dict(self):
+        return {"params": self.params, "target": self.target,
+                "opt": self.opt}
+
+    def load_state_dict(self, st):
+        self.params, self.target, self.opt = (st["params"], st["target"],
+                                              st["opt"])

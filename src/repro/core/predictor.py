@@ -1,0 +1,279 @@
+"""Output-length (decode-bucket) predictor (paper §5.1).
+
+A small JAX transformer encoder classifies an input prompt into a decode
+bucket.  Faithful elements of the paper's design:
+
+  * buckets are TIME-ALIGNED and unequal (0.5 * 4^k second boundaries
+    mapped to token counts via the hardware profile) rather than equal
+    token ranges;
+  * the task type is appended as a HINT token to the prompt
+    ("This is a <task> task"), which is what lifts accuracy from
+    near-chance (S^3-style, 5.5% in the paper) to useful levels;
+  * a task classifier (same encoder, task labels) shows the task itself is
+    recoverable from content (paper §A.7: 93.79%), justifying the hint.
+
+A feature-based variant (prompt length + app id -> bucket) reproduces the
+§A.12 production-trace predictor where prompt content is unavailable.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import workload as wl
+from repro.core.profiles import HardwareProfile
+
+
+@dataclass(frozen=True)
+class PredictorConfig:
+    vocab: int = wl.VOCAB + len(wl.TASKS) + 1   # + hint tokens + pad
+    seq_len: int = 64
+    d_model: int = 64
+    n_heads: int = 4
+    n_layers: int = 2
+    n_buckets: int = 8
+    use_hint: bool = True
+    lr: float = 3e-4
+    batch: int = 128
+
+
+def _pad_token(cfg: PredictorConfig) -> int:
+    return cfg.vocab - 1
+
+
+def hint_token(cfg: PredictorConfig, task_id: int) -> int:
+    return wl.VOCAB + task_id
+
+
+def encode_sample(cfg: PredictorConfig, s: wl.Sample) -> np.ndarray:
+    toks = list(s.token_ids[:cfg.seq_len - 1])
+    if cfg.use_hint:
+        toks.append(hint_token(cfg, s.task_id))   # "This is a <task> task"
+    toks = toks[:cfg.seq_len]
+    toks += [_pad_token(cfg)] * (cfg.seq_len - len(toks))
+    return np.asarray(toks, np.int32)
+
+
+def init_params(key, cfg: PredictorConfig, n_out: Optional[int] = None):
+    n_out = n_out or cfg.n_buckets
+    d, h = cfg.d_model, cfg.n_heads
+    ks = jax.random.split(key, 2 + 6 * cfg.n_layers)
+
+    def dense(k, *sh):
+        return jax.random.normal(k, sh) / np.sqrt(sh[0])
+
+    params = {"embed": dense(ks[0], cfg.vocab, d) * np.sqrt(d) / d,
+              "head": dense(ks[1], d, n_out)}
+    layers = []
+    for i in range(cfg.n_layers):
+        base = 2 + 6 * i
+        layers.append({
+            "wq": dense(ks[base], d, d), "wk": dense(ks[base + 1], d, d),
+            "wv": dense(ks[base + 2], d, d), "wo": dense(ks[base + 3], d, d),
+            "w1": dense(ks[base + 4], d, 4 * d),
+            "w2": dense(ks[base + 5], 4 * d, d),
+            "ln1": jnp.zeros((d,)), "ln2": jnp.zeros((d,)),
+        })
+    params["layers"] = layers
+    return params
+
+
+def _norm(x, w):
+    mu = jnp.mean(x, -1, keepdims=True)
+    var = jnp.var(x, -1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + 1e-6) * (1 + w)
+
+
+def apply(params, cfg: PredictorConfig, tokens: jax.Array) -> jax.Array:
+    """tokens [B, L] -> logits [B, n_out]."""
+    pad = _pad_token(cfg)
+    mask = (tokens != pad)
+    d, h = cfg.d_model, cfg.n_heads
+    hd = d // h
+    x = params["embed"][tokens]
+    pos = jnp.arange(cfg.seq_len)
+    x = x + 0.02 * jnp.sin(pos[:, None] * jnp.exp(
+        -jnp.arange(d)[None, :] / d * 6.0))
+    att_mask = (mask[:, None, None, :]).astype(jnp.float32)
+    for lp in params["layers"]:
+        hx = _norm(x, lp["ln1"])
+        q = (hx @ lp["wq"]).reshape(*hx.shape[:2], h, hd)
+        k = (hx @ lp["wk"]).reshape(*hx.shape[:2], h, hd)
+        v = (hx @ lp["wv"]).reshape(*hx.shape[:2], h, hd)
+        sc = jnp.einsum("bqhk,bshk->bhqs", q, k) / np.sqrt(hd)
+        sc = jnp.where(att_mask > 0, sc, -1e30)
+        w = jax.nn.softmax(sc, -1)
+        o = jnp.einsum("bhqs,bshk->bqhk", w, v).reshape(hx.shape)
+        x = x + o @ lp["wo"]
+        hx = _norm(x, lp["ln2"])
+        x = x + jax.nn.gelu(hx @ lp["w1"]) @ lp["w2"]
+    pooled = jnp.sum(x * mask[..., None], 1) / jnp.maximum(
+        jnp.sum(mask, 1, keepdims=True), 1)
+    return pooled @ params["head"]
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",), donate_argnums=(0, 1))
+def _train_step(params, opt, cfg: PredictorConfig, tokens, labels):
+    def loss_fn(p):
+        logits = apply(p, cfg, tokens)
+        logz = jax.nn.logsumexp(logits, -1)
+        gold = jnp.take_along_axis(logits, labels[:, None], 1)[:, 0]
+        return jnp.mean(logz - gold)
+
+    loss, grads = jax.value_and_grad(loss_fn)(params)
+    step = opt["step"] + 1
+    b1, b2, eps = 0.9, 0.999, 1e-8
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+    new_m = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, opt["m"], grads)
+    new_v = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * g * g,
+                         opt["v"], grads)
+    params = jax.tree.map(
+        lambda p, m, v: p - cfg.lr * (m / bc1) / (jnp.sqrt(v / bc2) + eps),
+        params, new_m, new_v)
+    return params, {"m": new_m, "v": new_v, "step": step}, loss
+
+
+class BucketPredictor:
+    """Trainable decode-bucket predictor over prompt content (+ hint)."""
+
+    def __init__(self, cfg: PredictorConfig, profile: HardwareProfile,
+                 seed: int = 0, n_out: Optional[int] = None,
+                 equal_buckets: bool = False):
+        self.cfg, self.profile = cfg, profile
+        self.equal_buckets = equal_buckets
+        self.n_out = n_out or cfg.n_buckets
+        self.params = init_params(jax.random.PRNGKey(seed), cfg, self.n_out)
+        self.opt = {"m": jax.tree.map(jnp.zeros_like, self.params),
+                    "v": jax.tree.map(jnp.zeros_like, self.params),
+                    "step": jnp.zeros((), jnp.int32)}
+
+    def label(self, s: wl.Sample) -> int:
+        if self.equal_buckets:        # S^3-style equal 250-token buckets
+            return min(s.decode_tokens // 250, self.n_out - 1)
+        return min(self.profile.bucketize(s.decode_tokens,
+                                          self.cfg.n_buckets),
+                   self.n_out - 1)
+
+    def fit(self, samples: Sequence[wl.Sample], epochs: int = 3,
+            seed: int = 0, labels: Optional[Sequence[int]] = None,
+            verbose: bool = False) -> List[float]:
+        cfg = self.cfg
+        x = np.stack([encode_sample(cfg, s) for s in samples])
+        y = np.asarray(labels if labels is not None
+                       else [self.label(s) for s in samples], np.int32)
+        rng = np.random.default_rng(seed)
+        losses = []
+        for ep in range(epochs):
+            order = rng.permutation(len(x))
+            for i in range(0, len(x) - cfg.batch + 1, cfg.batch):
+                idx = order[i:i + cfg.batch]
+                self.params, self.opt, loss = _train_step(
+                    self.params, self.opt, cfg, jnp.asarray(x[idx]),
+                    jnp.asarray(y[idx]))
+            losses.append(float(loss))
+            if verbose:
+                print(f"  predictor epoch {ep}: loss {float(loss):.3f}")
+        return losses
+
+    def predict(self, samples: Sequence[wl.Sample]) -> np.ndarray:
+        cfg = self.cfg
+        x = np.stack([encode_sample(cfg, s) for s in samples])
+        out = []
+        for i in range(0, len(x), 512):
+            logits = apply(self.params, cfg, jnp.asarray(x[i:i + 512]))
+            out.append(np.argmax(np.asarray(logits), -1))
+        return np.concatenate(out)
+
+    def accuracy(self, samples: Sequence[wl.Sample],
+                 labels: Optional[Sequence[int]] = None) -> float:
+        y = np.asarray(labels if labels is not None
+                       else [self.label(s) for s in samples])
+        return float(np.mean(self.predict(samples) == y))
+
+    def bucket_upper_tokens(self, bucket: int) -> int:
+        edges = self.profile.bucket_edges(self.cfg.n_buckets)
+        if bucket >= len(edges):
+            return int(edges[-1] * 2)
+        return int(edges[bucket])
+
+    def decode_estimate(self, samples: Sequence[wl.Sample]) -> np.ndarray:
+        """d-hat per sample = upper bound of the predicted bucket (what the
+        router's impact estimator consumes)."""
+        return np.array([self.bucket_upper_tokens(b)
+                         for b in self.predict(samples)])
+
+
+class TaskClassifier(BucketPredictor):
+    """§A.7: predict the task from content alone (no hint)."""
+
+    def __init__(self, profile, seed: int = 0):
+        cfg = PredictorConfig(use_hint=False)
+        super().__init__(cfg, profile, seed, n_out=len(wl.TASKS))
+
+    def label(self, s: wl.Sample) -> int:
+        return s.task_id
+
+
+# -- §A.12 trace predictor (no prompt content) ------------------------------
+
+class TracePredictor:
+    """(log prompt_len, app one-hot) -> bucket, tiny MLP (random-forest
+    stand-in; sklearn is unavailable offline)."""
+
+    def __init__(self, profile: HardwareProfile, n_apps: int,
+                 n_buckets: int = 8, seed: int = 0):
+        self.profile, self.n_buckets = profile, n_buckets
+        self.n_apps = n_apps
+        key = jax.random.PRNGKey(seed)
+        k1, k2 = jax.random.split(key)
+        d_in = 2 + n_apps
+        self.w1 = jax.random.normal(k1, (d_in, 64)) / np.sqrt(d_in)
+        self.b1 = jnp.zeros((64,))
+        self.w2 = jax.random.normal(k2, (64, n_buckets)) / np.sqrt(64)
+        self.b2 = jnp.zeros((n_buckets,))
+
+    def _feats(self, samples):
+        f = np.zeros((len(samples), 2 + self.n_apps), np.float32)
+        for i, s in enumerate(samples):
+            f[i, 0] = np.log1p(s.prompt_tokens) / 10.0
+            f[i, 1] = (s.prompt_tokens % 997) / 997.0
+            f[i, 2 + s.task_id % self.n_apps] = 1.0
+        return f
+
+    def fit(self, samples, epochs: int = 60, lr: float = 1e-2,
+            seed: int = 0):
+        x = jnp.asarray(self._feats(samples))
+        y = jnp.asarray([min(self.profile.bucketize(s.decode_tokens,
+                                                    self.n_buckets),
+                             self.n_buckets - 1) for s in samples])
+        params = (self.w1, self.b1, self.w2, self.b2)
+
+        def loss_fn(p):
+            w1, b1, w2, b2 = p
+            logits = jax.nn.relu(x @ w1 + b1) @ w2 + b2
+            logz = jax.nn.logsumexp(logits, -1)
+            gold = jnp.take_along_axis(logits, y[:, None], 1)[:, 0]
+            return jnp.mean(logz - gold)
+
+        grad_fn = jax.jit(jax.value_and_grad(loss_fn))
+        for _ in range(epochs):
+            _, g = grad_fn(params)
+            params = jax.tree.map(lambda p, gi: p - lr * gi, params, g)
+        self.w1, self.b1, self.w2, self.b2 = params
+
+    def predict(self, samples) -> np.ndarray:
+        x = jnp.asarray(self._feats(samples))
+        logits = jax.nn.relu(x @ self.w1 + self.b1) @ self.w2 + self.b2
+        return np.asarray(jnp.argmax(logits, -1))
+
+    def accuracy(self, samples) -> float:
+        y = np.asarray([min(self.profile.bucketize(s.decode_tokens,
+                                                   self.n_buckets),
+                            self.n_buckets - 1) for s in samples])
+        return float(np.mean(self.predict(samples) == y))

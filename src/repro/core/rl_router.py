@@ -1,0 +1,374 @@
+"""The intelligent router: heuristic-guided RL (paper §5.3, §6).
+
+Three variants (paper §6 Setup):
+  baseline  -- reward = backlog penalty + completion reward (terms 1+2 of
+               Eq. 3)
+  aware     -- baseline + r_mixing(chosen) added directly to the reward
+               ("workload-augmented", fixed weight 1)
+  guided    -- heuristic-guided (Cheng et al. 2021): reward +=
+               w_k * h(s_t, a) with h = r_mixing(chosen) - max_l r_mixing(l)
+               <= 0, w_k = gamma * exp(-beta_d * k) decaying per episode;
+               the training discount is gamma_k = gamma - w_k (short horizon
+               + strong guidance early; original MDP recovered as k grows).
+
+Sign note: Eq. 3 prints "- (gamma - gamma_k) h"; with the paper's h <= 0
+that would *reward* bad placements, contradicting §5.3's own description
+("h returns zero when the request is assigned to the model with the least
+workload mixing impact" -- i.e. zero is the best case).  We implement the
+evidently intended penalty  + w_k * h.
+"""
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core import impact, state as state_lib
+from repro.core.dqn import DQNAgent, DQNConfig
+from repro.core.profiles import HardwareProfile
+from repro.core.simulator import Cluster
+from repro.serving.request import Request, summarize
+
+
+@dataclass
+class RouterConfig:
+    variant: str = "guided"          # baseline | aware | guided
+    n_instances: int = 4
+    dt: float = 0.02
+    gamma: float = 0.997             # ~7 s credit horizon at dt=0.02
+    r_w: float = 60.0                # completion reward (§A.9.3)
+    alpha: float = 0.5               # Eq.(1)/(2) balance (§6 Setup)
+    beta_d: float = 0.5              # guidance decay (§6 Setup)
+    scheduler: str = "fcfs"
+    chunked_prefill: int = 0
+    n_buckets: int = 8
+    actions_per_tick: int = 1
+    learn_every: int = 4
+    eps_start: float = 1.0
+    eps_end: float = 0.05
+    explore_episodes: int = 20       # §A.9.2: no exploration after ep 20
+    n_slots: Optional[int] = None
+    max_time: float = 36_000.0
+    hidden: tuple = (64, 64)
+    lr: float = 3e-4
+    include_impact_features: bool = True
+    reward_scale: float = 300.0
+    q_squash: float = 0.05       # bound on Q's selection influence (guided)
+    q_arch: str = "mlp"              # "mlp" (paper) | "decomposed" (ours)
+    # SLA safety valve: if the head request has waited this long at the
+    # router, a defer action is overridden with the best-impact placement
+    # (a production watchdog; also bounds episode length against
+    # defer-forever policies).  Each rescue costs sla_penalty so the agent
+    # cannot lean on the watchdog.
+    defer_timeout: float = 5.0
+    sla_penalty: float = 10.0
+    # NOTE: potential-based shaping was tried and REFUTED here: with every
+    # episode completing all requests, the telescoped backlog sum is
+    # policy-independent and the learning signal vanished (see
+    # EXPERIMENTS.md §Perf lessons).  The raw Eq.(3) backlog integral is
+    # the latency signal; reward centering handles its magnitude.
+    potential_shaping: bool = False
+    r_w_shaped: float = 1.0          # completion bonus under shaping
+    # decision-time guidance floor: actions are selected from
+    # Q(s,a) + floor * r_mixing-advantage(a).  The paper anneals guidance
+    # to exactly zero; we found (see EXPERIMENTS.md, refuted-hypothesis
+    # log) that with a pure annealed DQN the argmax is dominated by Q
+    # noise and collapses to defer-everything / one-instance policies.
+    # A strong persistent prior keeps the workload heuristic in charge
+    # where Q differences are small and lets the learned values override
+    # it where they are confident -- worst case is impact-greedy parity.
+    guidance_floor: float = 1.0
+    defer_prior_bias: float = -0.05  # slight routing preference in the prior
+    # n-step truncated-return targets (no bootstrapping): Q regresses the
+    # discounted return over the next `nstep` decisions.  Bootstrapped
+    # 1-step DQN (nstep=0, the paper's setup) proved unstable on this MDP
+    # (tiny action advantages under a huge action-independent backlog
+    # term); truncated Monte-Carlo targets are plain supervised regression
+    # and capture placement effects, which materialize within seconds.
+    nstep: int = 80
+    nstep_gamma: float = 0.97
+    seed: int = 0
+
+
+class RoutingEnv:
+    """One router action per dt tick (the paper's 0.02 s cadence)."""
+
+    def __init__(self, cfg: RouterConfig, profile: HardwareProfile,
+                 predict_decode: Optional[Callable] = None):
+        self.cfg = cfg
+        self.profile = profile
+        # d-hat: estimated decode tokens for a request (predictor hook;
+        # oracle fallback)
+        self.predict_decode = predict_decode or (
+            lambda r: r.decode_tokens)
+
+    def reset(self, requests: Sequence[Request]):
+        c = self.cfg
+        self.cluster = Cluster(self.profile, c.n_instances, c.scheduler,
+                               c.dt, c.chunked_prefill, c.n_slots)
+        self.pending = sorted(requests, key=lambda r: r.arrival)
+        self.n_total = len(self.pending)
+        self._arrived: List[Request] = []
+        self._i = 0
+        self._deliver()
+        return self._state()
+
+    def _deliver(self):
+        while (self._i < self.n_total
+               and self.pending[self._i].arrival <= self.cluster.t):
+            r = self.pending[self._i]
+            self.cluster.enqueue(r)
+            self._arrived.append(r)
+            self._i += 1
+
+    def _state(self) -> np.ndarray:
+        return state_lib.featurize(
+            self.cluster, self.profile, n_buckets=self.cfg.n_buckets,
+            include_impact=self.cfg.include_impact_features,
+            predict_decode=self.predict_decode, alpha=self.cfg.alpha)
+
+    def mask(self) -> np.ndarray:
+        return state_lib.action_mask(self.cluster)
+
+    def guidance_bonus(self) -> np.ndarray:
+        """Per-action r_mixing advantage for the current head request
+        (route_i: scores_i - max; defer: min - max), zeros if no request."""
+        cluster = self.cluster
+        out = np.zeros(cluster.m + 1, np.float32)
+        if not cluster.central:
+            return out
+        req = cluster.central[0]
+        d_hat = max(self.predict_decode(req), 1)
+        sums = [inst.resident_token_sum()
+                + sum(r.prompt_tokens + r.decoded for r in inst.queue)
+                for inst in cluster.instances]
+        scores = impact.mixing_per_instance(
+            self.profile, req.prompt_tokens, d_hat, sums, self.cfg.alpha)
+        for i, inst in enumerate(cluster.instances):
+            if inst.failed:
+                scores[i] = -np.inf
+        # capacity-fit term (§5.3 reward design goal (c): prevent requests
+        # from queueing at instances for lack of memory): placements that
+        # would overflow the KV budget are penalized; if nothing fits,
+        # deferring is encouraged instead.
+        need = req.prompt_tokens + d_hat
+        fits = np.array([inst.free_tokens() >= need and not inst.failed
+                         for inst in cluster.instances])
+        scores = scores + np.where(fits, 0.0, -0.3)
+        finite = scores[np.isfinite(scores)]
+        top = finite.max() if finite.size else 0.0
+        out[:cluster.m] = np.where(np.isfinite(scores), scores - top, -1e9)
+        defer_bias = 0.2 - top if not fits.any() else \
+            self.cfg.defer_prior_bias
+        out[cluster.m] = ((finite.min() - top) if finite.size > 1
+                          else 0.0) + defer_bias
+        return out
+
+    def _backlog_penalty(self) -> float:
+        pen = 0.0
+        for r in self._arrived:
+            if r.finished is not None:
+                continue
+            d_hat = max(self.predict_decode(r), 1)
+            t_hat = self.profile.request_time(r.prompt_tokens, d_hat)
+            f = min(r.decoded / d_hat, 1.0)
+            pen -= (1.0 - f) / max(t_hat, 1e-3)
+        return pen
+
+    def step(self, action: int, guide_w: float = 0.0):
+        """One DECISION: apply the action, then advance dt ticks until the
+        next decision point (non-empty router queue) or episode end,
+        accumulating the Eq.(3) reward.  Ticks with an empty queue have no
+        choice to make (forced defer), so they are not decision states --
+        this keeps the replay buffer full of actual decisions while
+        preserving the paper's 0.02 s simulation cadence."""
+        c = self.cfg
+        cluster = self.cluster
+        mix_term = 0.0
+        scores = None
+        if cluster.central:
+            req = cluster.central[0]
+            d_hat = max(self.predict_decode(req), 1)
+            sums = [inst.resident_token_sum()
+                    + sum(r.prompt_tokens + r.decoded for r in inst.queue)
+                    for inst in cluster.instances]
+            scores = impact.mixing_per_instance(
+                self.profile, req.prompt_tokens, d_hat, sums, c.alpha)
+            for i, inst in enumerate(cluster.instances):
+                if inst.failed:
+                    scores[i] = -np.inf
+        if (action >= cluster.m and scores is not None
+                and cluster.t - cluster.central[0].arrival
+                > c.defer_timeout):
+            # SLA watchdog: force the best-impact placement, at a price
+            action = int(np.argmax(scores))
+            mix_term -= c.sla_penalty
+        if action < cluster.m and cluster.central:
+            if c.variant == "aware":
+                mix_term += float(scores[action])
+            elif c.variant == "guided":
+                mix_term += guide_w * float(scores[action] - scores.max())
+            cluster.route(action)
+        elif scores is not None and c.variant == "guided":
+            # deferring forfeits the currently-best placement; under the
+            # guiding heuristic ("route to argmax r_mixing now") that costs
+            # the quality spread it gives up.  (Strategic delay can still
+            # be learned once the guidance anneals away.)
+            finite = scores[np.isfinite(scores)]
+            if finite.size > 1:
+                mix_term += guide_w * float(finite.min() - finite.max())
+        reward = mix_term
+        completed = 0
+        phi_before = self._backlog_penalty()
+        while True:
+            done_now = cluster.advance()
+            self._deliver()
+            completed += len(done_now)
+            if not c.potential_shaping:
+                reward += (self._backlog_penalty() * c.dt
+                           + c.r_w * len(done_now))
+            else:
+                reward += c.r_w_shaped * len(done_now)
+            done = (len(cluster.completed) >= self.n_total
+                    or cluster.t > c.max_time)
+            if done or cluster.central:
+                break
+        if c.potential_shaping:
+            # potential-based shaping on the backlog level: the raw Eq.(3)
+            # backlog integral has a huge action-independent component that
+            # drowns action advantages in the TD signal; telescoping the
+            # potential keeps the optimal policy (Ng et al. 1999) while the
+            # per-step reward tracks backlog CHANGES.
+            phi_after = self._backlog_penalty()
+            reward += (c.gamma * phi_after - phi_before)
+        return self._state(), reward, done, {"completed": completed}
+
+
+def make_agent(cfg: RouterConfig) -> DQNAgent:
+    inst_dims = state_lib.INSTANCE_DIMS + (
+        1 if cfg.include_impact_features else 0)
+    dcfg = DQNConfig(
+        state_dim=state_lib.state_dim(cfg.n_instances,
+                                      cfg.include_impact_features),
+        n_actions=cfg.n_instances + 1, hidden=cfg.hidden,
+        gamma=cfg.gamma, lr=cfg.lr, q_arch=cfg.q_arch,
+        inst_dims=inst_dims, router_dims=state_lib.ROUTER_DIMS,
+        center_rewards=not cfg.potential_shaping)
+    return DQNAgent(dcfg, seed=cfg.seed)
+
+
+def guidance_weight(cfg: RouterConfig, episode: int) -> float:
+    if cfg.variant != "guided":
+        return 0.0
+    return cfg.gamma * float(np.exp(-cfg.beta_d * episode))
+
+
+def train(cfg: RouterConfig, profile: HardwareProfile,
+          workload_fn: Callable[[int], Sequence[Request]],
+          n_episodes: int, agent: Optional[DQNAgent] = None,
+          predict_decode: Optional[Callable] = None,
+          valid_fn: Optional[Callable[[], Sequence[Request]]] = None,
+          verbose: bool = False) -> Dict:
+    """Train the RL router; returns {agent, history}.
+
+    valid_fn: workload for periodic GREEDY validation; the best-validating
+    snapshot is restored at the end (protects against the well-known
+    late-training DQN collapse when epsilon hits zero)."""
+    import copy as _copy
+    import jax
+    import jax.numpy as jnp
+    agent = agent or make_agent(cfg)
+    env = RoutingEnv(cfg, profile, predict_decode)
+    history = []
+    best = None
+    for ep in range(n_episodes):
+        requests = workload_fn(ep)
+        s = env.reset(requests)
+        w_k = guidance_weight(cfg, ep)
+        # training discount: gamma_k = gamma - w_k (guided); else gamma
+        gamma_k = cfg.gamma - w_k if cfg.variant == "guided" else cfg.gamma
+        frac = min(ep / max(cfg.explore_episodes, 1), 1.0)
+        eps = cfg.eps_start + (cfg.eps_end - cfg.eps_start) * frac
+        if ep >= cfg.explore_episodes:
+            eps = 0.0               # §A.9.2: exploit after episode 20
+        # per-episode discount (heuristic-guided horizon shortening)
+        if agent.cfg.gamma != gamma_k:
+            import dataclasses as _dc
+            agent.cfg = _dc.replace(agent.cfg, gamma=round(gamma_k, 3))
+        w_sel = max(w_k, cfg.guidance_floor) \
+            if cfg.variant == "guided" else 0.0
+        scale = 1.0 if cfg.potential_shaping else cfg.reward_scale
+        ep_reward, ticks, done = 0.0, 0, False
+        window: deque = deque()          # n-step return assembly
+        g = cfg.nstep_gamma
+
+        def flush_one():
+            s0, a0, rs = window.popleft()
+            ret = 0.0
+            for i, ri in enumerate(rs):
+                ret += (g ** i) * ri
+            agent.observe(s0, a0, ret, s, 1.0, env.mask())
+
+        while not done:
+            mask = env.mask()
+            prior = w_sel * env.guidance_bonus() if w_sel else None
+            a = agent.act(s, mask, epsilon=eps, prior=prior,
+                          q_squash=cfg.q_squash if w_sel else 0.0)
+            s2, r, done, _ = env.step(a, guide_w=w_k)
+            if cfg.nstep > 0:
+                for _, _, rs in window:
+                    rs.append(r / scale)
+                window.append((s, a, [r / scale]))
+                if len(window) > cfg.nstep:
+                    flush_one()
+            else:
+                agent.observe(s, a, r / scale, s2, float(done), env.mask())
+            if ticks % cfg.learn_every == 0:
+                agent.learn()
+            s = s2
+            ep_reward += r
+            ticks += 1
+        while window:
+            flush_one()
+        stats = summarize(requests)
+        stats.update({"episode": ep, "reward": ep_reward, "ticks": ticks,
+                      "epsilon": eps, "guide_w": w_k})
+        # greedy-validation snapshot selection
+        if valid_fn is not None and eps <= 0.6:
+            v = evaluate(cfg, profile, agent, valid_fn(),
+                         predict_decode)
+            stats["valid_e2e"] = v["e2e_mean"]
+            if best is None or v["e2e_mean"] < best[0]:
+                best = (v["e2e_mean"], jax.tree.map(jnp.copy, agent.params))
+        history.append(stats)
+        if verbose:
+            print(f"ep {ep:3d} eps={eps:.2f} w_k={w_k:.3f} "
+                  f"reward={ep_reward:10.1f} e2e={stats['e2e_mean']:.2f}"
+                  + (f" valid={stats['valid_e2e']:.2f}"
+                     if "valid_e2e" in stats else ""))
+    if best is not None:
+        agent.params = best[1]
+        agent.target = jax.tree.map(jnp.copy, best[1])
+    return {"agent": agent, "history": history}
+
+
+def evaluate(cfg: RouterConfig, profile: HardwareProfile, agent: DQNAgent,
+             requests: Sequence[Request],
+             predict_decode: Optional[Callable] = None) -> Dict:
+    env = RoutingEnv(cfg, profile, predict_decode)
+    s = env.reset(requests)
+    done = False
+    w_sel = cfg.guidance_floor if cfg.variant == "guided" else 0.0
+    while not done:
+        prior = w_sel * env.guidance_bonus() if w_sel else None
+        a = agent.act(s, env.mask(), epsilon=0.0, prior=prior,
+                      q_squash=cfg.q_squash if w_sel else 0.0)
+        s, _, done, _ = env.step(a)
+    stats = summarize(requests)
+    stats["spikes"] = sum(len(i.spikes) for i in env.cluster.instances)
+    stats["router_wait_mean"] = float(np.mean(
+        [r.routed_at - r.arrival for r in requests
+         if r.routed_at is not None])) if requests else 0.0
+    return stats

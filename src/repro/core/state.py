@@ -1,0 +1,100 @@
+"""MDP state featurization (paper §5.3 State Space + §A.9 bounds).
+
+Per instance (8 dims):
+  P_t histogram: resident prompt tokens in 3 buckets (0-256, 256-2048, >2048)
+  D_t histogram: resident decoded tokens in the same 3 buckets
+  C_t: free capacity fraction
+  T_c: estimated earliest completion (clipped, normalized)
+Router (4 dims):
+  queue length (bounded by 4 x max_batch = 512, as §A.9),
+  next request prompt tokens (normalized),
+  next request predicted decode bucket,
+  head-of-queue waiting time (clipped).
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import numpy as np
+
+from repro.core.profiles import HardwareProfile
+from repro.core.simulator import Cluster
+
+BUCKET_EDGES = (256, 2048)          # paper A.9 DQN buckets
+N_BUCKETS = len(BUCKET_EDGES) + 1
+INSTANCE_DIMS = 2 * N_BUCKETS + 2
+ROUTER_DIMS = 4
+
+
+def state_dim(m: int, include_impact: bool = True) -> int:
+    return (INSTANCE_DIMS + (1 if include_impact else 0)) * m + ROUTER_DIMS
+
+
+def _hist(tokens, scale: float) -> np.ndarray:
+    h = np.zeros(N_BUCKETS, np.float32)
+    for t in tokens:
+        h[int(np.searchsorted(BUCKET_EDGES, t, side="right"))] += 1
+    return h / scale
+
+
+def featurize(cluster: Cluster, profile: HardwareProfile,
+              predict_bucket: Optional[Callable] = None,
+              n_buckets: int = 8, include_impact: bool = True,
+              predict_decode: Optional[Callable] = None,
+              alpha: float = 0.5) -> np.ndarray:
+    feats = []
+    head = cluster.central[0] if cluster.central else None
+    for inst in cluster.instances:
+        dims = INSTANCE_DIMS + (1 if include_impact else 0)
+        if inst.failed:
+            feats.extend([0.0] * dims)
+            continue
+        s = inst.load_summary()
+        scale = float(inst.n_slots)
+        feats.extend(_hist(s["p_tokens"], scale))
+        feats.extend(_hist(s["d_tokens"], scale))
+        feats.append(np.clip(s["free_tokens"]
+                             / profile.capacity_tokens, -1.0, 1.0))
+        feats.append(np.clip(s["earliest_completion"] / 10.0, 0.0, 1.0))
+        if include_impact:
+            # the workload impact estimator is a router module (§5.2); its
+            # per-instance score for the head request is part of the
+            # router's observable state.
+            if head is not None:
+                from repro.core import impact
+                d_hat = (predict_decode(head) if predict_decode
+                         else head.decode_tokens)
+                resident = s["resident_tokens"] + sum(
+                    r.prompt_tokens + r.decoded for r in inst.queue)
+                score = impact.r_mixing(profile, head.prompt_tokens,
+                                        d_hat, resident, alpha)
+                feats.append(float(np.clip(score, -5.0, 1.0)))
+            else:
+                feats.append(0.0)
+    qlen = min(len(cluster.central), 512) / 512.0
+    if head is not None:
+        if head.predicted_bucket is not None:
+            bucket = head.predicted_bucket
+        elif predict_bucket is not None:
+            bucket = predict_bucket(head)
+        else:
+            bucket = profile.bucketize(head.decode_tokens, n_buckets)
+        p_norm = min(head.prompt_tokens, 2048) / 2048.0
+        b_norm = bucket / max(n_buckets - 1, 1)
+        wait = np.clip((cluster.t - head.arrival) / 10.0, 0.0, 1.0)
+    else:
+        p_norm = b_norm = wait = 0.0
+    feats.extend([qlen, p_norm, b_norm, wait])
+    return np.asarray(feats, np.float32)
+
+
+def action_mask(cluster: Cluster) -> np.ndarray:
+    """[m+1] bool: failed instances masked out; defer always allowed."""
+    m = cluster.m
+    mask = np.zeros(m + 1, bool)
+    for i, inst in enumerate(cluster.instances):
+        mask[i] = not inst.failed
+    mask[m] = True
+    if not cluster.central:          # nothing to route: only defer is valid
+        mask[:m] = False
+    return mask

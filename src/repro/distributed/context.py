@@ -1,0 +1,105 @@
+"""Ambient parallelism context.
+
+Launchers (dryrun/train/serve) install the active mesh + axis-role mapping
+here so model code (e.g. the expert-parallel MoE shard_map) can find it
+without threading mesh objects through every scan body.  When no context is
+set, model code falls back to single-device implementations -- which is what
+CPU smoke tests want.
+"""
+from __future__ import annotations
+
+import contextlib
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+
+@dataclass
+class ParallelContext:
+    mesh: object = None                      # jax Mesh or None
+    batch_axes: Tuple[str, ...] = ()         # axes the global batch shards over
+    model_axis: Optional[str] = None         # TP axis name
+    ep_axes: Tuple[str, ...] = ()            # expert-parallel axes
+    seq_axis: Optional[str] = None           # SP axis (long-context)
+
+
+_CURRENT = ParallelContext()
+
+
+def get() -> ParallelContext:
+    return _CURRENT
+
+
+def set_context(ctx: ParallelContext) -> None:
+    global _CURRENT
+    _CURRENT = ctx
+
+
+@contextlib.contextmanager
+def use(ctx: ParallelContext):
+    global _CURRENT
+    prev = _CURRENT
+    _CURRENT = ctx
+    try:
+        yield ctx
+    finally:
+        _CURRENT = prev
+
+
+def tp_size() -> int:
+    ctx = get()
+    if ctx.mesh is None or ctx.model_axis is None:
+        return 1
+    return ctx.mesh.shape[ctx.model_axis]
+
+
+def constrain_heads(x, head_dim: int = 2, batch_dim: int = 0):
+    """Shard dim ``head_dim`` over the model axis (+ batch over batch
+    axes) when divisible; no-op otherwise."""
+    import math
+    import jax
+    from jax.sharding import NamedSharding, PartitionSpec
+    ctx = get()
+    if ctx.mesh is None or ctx.model_axis is None:
+        return x
+    tp = ctx.mesh.shape[ctx.model_axis]
+    if x.shape[head_dim] % tp != 0:
+        return x
+    dims = [None] * x.ndim
+    dims[head_dim] = ctx.model_axis
+    if ctx.batch_axes and x.shape[batch_dim] % math.prod(
+            ctx.mesh.shape[a] for a in ctx.batch_axes) == 0:
+        dims[batch_dim] = ctx.batch_axes
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(ctx.mesh, PartitionSpec(*dims)))
+
+
+def constrain_batch(x, batch_dim: int = 0):
+    """with_sharding_constraint: shard dim ``batch_dim`` over the batch
+    axes, everything else replicated.  No-op without an ambient mesh.
+    Used at layer boundaries -- SPMD propagation through rematted
+    scan-in-scan bodies otherwise drops the batch sharding and silently
+    replicates activations."""
+    import jax
+    from jax.sharding import NamedSharding, PartitionSpec
+    ctx = get()
+    if ctx.mesh is None or not ctx.batch_axes:
+        return x
+    if x.shape[batch_dim] % max(
+            1, __import__("math").prod(
+                ctx.mesh.shape[a] for a in ctx.batch_axes)) != 0:
+        return x
+    dims = [None] * x.ndim
+    dims[batch_dim] = ctx.batch_axes
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(ctx.mesh, PartitionSpec(*dims)))
+
+
+def data_shards() -> int:
+    """Size of the expert-parallel axis product (0 if no context)."""
+    ctx = get()
+    if ctx.mesh is None:
+        return 0
+    n = 1
+    for a in ctx.ep_axes:
+        n *= ctx.mesh.shape[a]
+    return n

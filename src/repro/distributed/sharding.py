@@ -1,0 +1,211 @@
+"""Logical-axis sharding rules (DP / FSDP / TP / EP / SP).
+
+Every parameter leaf is matched by its tree path to a rule that assigns mesh
+axes to tensor dims, with divisibility fallbacks (e.g. starcoder2's 36 heads
+do not divide a 16-way "model" axis, so TP falls back to the 128-wide
+head_dim).  Rules differ between train (FSDP over "data"/"pod") and serve
+(weights replicated across instances -- the paper's homogeneous-instance
+setting -- except EP expert shards).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.common.config import ModelConfig
+
+
+def _fits(dim: int, mesh, axes) -> bool:
+    if dim is None or not axes:
+        return False
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return dim % n == 0 and dim >= n
+
+
+def _axis(mesh, dim_size: int, axes) -> Any:
+    """Return axes (tuple or single name) if divisible, else None."""
+    if isinstance(axes, str):
+        axes = (axes,)
+    axes = tuple(a for a in axes if a in mesh.axis_names)
+    if not axes:
+        return None
+    return axes if _fits(dim_size, mesh, axes) else None
+
+
+def _path_names(path) -> Tuple[str, ...]:
+    names = []
+    for k in path:
+        if hasattr(k, "key"):
+            names.append(str(k.key))
+        elif hasattr(k, "idx"):
+            names.append(f"[{k.idx}]")
+    return tuple(names)
+
+
+def param_spec(names: Tuple[str, ...], shape: Tuple[int, ...],
+               cfg: ModelConfig, mesh, mode: str) -> P:
+    """PartitionSpec for one parameter leaf.
+
+    mode: "train" (FSDP over data axes) | "serve" (replicated weights)."""
+    fsdp = tuple(a for a in ("pod", "data") if a in mesh.axis_names) \
+        if mode == "train" else ()
+    tp = "model"
+    name = names[-1]
+    stacked = "layers" in names            # leading n_periods dim
+    off = 1 if stacked else 0
+
+    def spec(*dims):
+        full = (None,) * off + dims
+        full = full[:len(shape)] + (None,) * (len(shape) - len(full))
+        return P(*full)
+
+    dims = shape[off:]
+
+    def fsdp_ax(i):
+        return _axis(mesh, dims[i], fsdp) if fsdp else None
+
+    def tp_ax(i):
+        return _axis(mesh, dims[i], tp)
+
+    in_moe = "routed" in names
+    if in_moe:
+        # EP storage: experts over "data"; f over "model"; d gets no FSDP
+        ep = _axis(mesh, dims[0], "data") if cfg.moe and \
+            cfg.moe.impl == "ep" else fsdp_ax(0)
+        if name in ("w_up", "w_gate"):      # [E, d, f]
+            return spec(ep, None, tp_ax(2))
+        if name == "w_down":                # [E, f, d]
+            return spec(ep, tp_ax(1), None)
+    if name == "router":
+        return spec(None, None)
+    if name == "embed":                     # [V, d]
+        # d stays UNSHARDED: the lookup output is [B(data), S, d] -- an
+        # fsdp('data') sharding on d conflicts with the batch axis and
+        # makes SPMD replicate the gather (tens of GiB at 150k vocab).
+        return spec(tp_ax(0), None)
+    if name == "lm_head":                   # [d, V]
+        return spec(fsdp_ax(0), tp_ax(1))
+    if name == "vision_proj":
+        return spec(None, fsdp_ax(1))
+    if name in ("wq", "wk", "wv"):          # [d, H, hd]
+        # heads over "model" where divisible; NEVER shard head_dim (RoPE
+        # splits hd in half, which conflicts with an hd sharding and
+        # triggers involuntary full rematerialization in SPMD).
+        return spec(fsdp_ax(0), tp_ax(1), None)
+    if name == "wo":                        # [H, hd, d]
+        return spec(tp_ax(0), None, fsdp_ax(2))
+    if name == "wq_b":                      # [r, H, qk]
+        return spec(None, tp_ax(1), None)
+    if name == "wkv_b":                     # [r, H, nope+v]
+        return spec(None, tp_ax(1), None)
+    if name in ("wq_a", "wkv_a"):           # [d, r]
+        return spec(fsdp_ax(0), None)
+    if name in ("w_up", "w_gate"):          # [d, f]
+        return spec(fsdp_ax(0), tp_ax(1))
+    if name == "w_down":                    # [f, d]
+        return spec(tp_ax(0), fsdp_ax(1))
+    if name == "in_proj":                   # [d, 2*di]
+        return spec(fsdp_ax(0), tp_ax(1))
+    if name in ("conv_w",):                 # [dc, di]
+        return spec(None, tp_ax(1))
+    if name in ("conv_b", "dt_bias", "D"):  # [di]
+        return spec(tp_ax(0))
+    if name == "x_proj":                    # [di, dtr+2ds]
+        return spec(tp_ax(0), None)
+    if name == "dt_proj":                   # [dtr, di]
+        return spec(None, tp_ax(1))
+    if name == "A_log":                     # [di, ds]
+        return spec(tp_ax(0), None)
+    if name == "out_proj":                  # [di, d]
+        return spec(tp_ax(0), fsdp_ax(1))
+    # norms, gates, scalars
+    return P(*((None,) * len(shape)))
+
+
+def params_shardings(cfg: ModelConfig, params_tree, mesh, mode: str):
+    """NamedSharding tree mirroring a params (or opt-state slot) tree."""
+    def one(path, leaf):
+        spec = param_spec(_path_names(path), leaf.shape, cfg, mesh, mode)
+        return NamedSharding(mesh, spec)
+    return jax.tree_util.tree_map_with_path(one, params_tree)
+
+
+# ---------------------------------------------------------------------------
+# activations / inputs / caches
+# ---------------------------------------------------------------------------
+
+def _batch_axes(mesh):
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def batch_spec(mesh, batch_size: int, extra_dims: int = 1) -> P:
+    ax = _axis(mesh, batch_size, _batch_axes(mesh))
+    return P(ax, *((None,) * extra_dims))
+
+
+def input_shardings(cfg: ModelConfig, mesh, tree):
+    """Shardings for a batch dict of ShapeDtypeStructs: dim0 = batch."""
+    def one(leaf):
+        ax = _axis(mesh, leaf.shape[0], _batch_axes(mesh))
+        return NamedSharding(mesh, P(ax, *((None,) * (leaf.ndim - 1))))
+    return jax.tree.map(one, tree)
+
+
+def cache_shardings(cfg: ModelConfig, mesh, cache_tree, seq_parallel: bool):
+    """Decode-cache shardings.
+
+    Normal decode: batch over data axes, kv-heads (or latent/channel dims)
+    over "model" where divisible.  long-context (seq_parallel): the KV
+    sequence axis shards over the data axes instead (context parallelism);
+    SSM channel state shards over "model".
+    """
+    batch_ax = _batch_axes(mesh)
+
+    def one(path, leaf):
+        names = _path_names(path)
+        name = names[-1]
+        shape = leaf.shape
+        if name == "pos":
+            return NamedSharding(mesh, P(None))
+        stacked = "layers" in names
+        off = 1 if stacked else 0
+        dims = shape[off:]
+        lead = (None,) * off
+        b_ax = _axis(mesh, dims[0], batch_ax)
+        if name in ("k", "v"):                   # [B,S,KV,hd]
+            if seq_parallel and b_ax is None:
+                s_ax = _axis(mesh, dims[1], batch_ax)
+                return NamedSharding(
+                    mesh, P(*lead, None, s_ax, None,
+                            _axis(mesh, dims[3], "model")))
+            kv_ax = _axis(mesh, dims[2], "model")
+            hd_ax = None if kv_ax is not None else _axis(
+                mesh, dims[3], "model")
+            return NamedSharding(mesh, P(*lead, b_ax, None, kv_ax, hd_ax))
+        if name == "ckv":                        # [B,S,r]
+            if seq_parallel and b_ax is None:
+                return NamedSharding(
+                    mesh, P(*lead, None, _axis(mesh, dims[1], batch_ax),
+                            None))
+            return NamedSharding(mesh, P(*lead, b_ax, None,
+                                         _axis(mesh, dims[2], "model")))
+        if name == "kr":                         # [B,S,rope] rope is tiny
+            if seq_parallel and b_ax is None:
+                return NamedSharding(
+                    mesh, P(*lead, None, _axis(mesh, dims[1], batch_ax),
+                            None))
+            return NamedSharding(mesh, P(*lead, b_ax, None, None))
+        if name == "ssm":                        # [B,di,ds]
+            return NamedSharding(
+                mesh, P(*lead, b_ax, _axis(mesh, dims[1], "model"), None))
+        if name == "conv":                       # [B,dc-1,di]
+            return NamedSharding(
+                mesh, P(*lead, b_ax, None, _axis(mesh, dims[2], "model")))
+        return NamedSharding(mesh, P(*lead, b_ax,
+                                     *((None,) * (len(dims) - 1))))
+
+    return jax.tree_util.tree_map_with_path(one, cache_tree)

@@ -1,0 +1,21 @@
+"""Jitted public wrapper for the decode-attention kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.decode_attention.kernel import decode_attention_kernel
+from repro.kernels.decode_attention.ref import decode_attention_ref
+
+
+@functools.partial(jax.jit, static_argnames=("block_k", "interpret"))
+def decode_attention(q, k, v, kv_len, block_k: int = 512,
+                     interpret: bool = None):
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return decode_attention_kernel(q, k, v, kv_len, block_k=block_k,
+                                   interpret=interpret)
+
+
+reference = decode_attention_ref

@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for single-token decode attention (GQA, length-masked)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def decode_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                         kv_len: jax.Array) -> jax.Array:
+    """q [B,1,H,hd]; k/v [B,S,KV,hd]; kv_len [B] valid prefix lengths
+    -> [B,1,H,hd]."""
+    b, _, h, hd = q.shape
+    s, kvh = k.shape[1], k.shape[2]
+    g = h // kvh
+    qg = q.reshape(b, kvh, g, hd).astype(jnp.float32)
+    scores = jnp.einsum("bkgd,bskd->bkgs", qg,
+                        k.astype(jnp.float32)) / jnp.sqrt(float(hd))
+    mask = jnp.arange(s)[None, :] < kv_len[:, None]          # [B,S]
+    scores = jnp.where(mask[:, None, None, :], scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", w, v.astype(jnp.float32))
+    return out.reshape(b, 1, h, hd).astype(q.dtype)

@@ -1,0 +1,29 @@
+"""Jitted public wrapper for the flash-attention kernel.
+
+On CPU (no TPU backend) the kernel runs in interpret mode when explicitly
+requested; the model's default CPU path is the jnp reference.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.flash_attention.kernel import flash_attention_kernel
+from repro.kernels.flash_attention.ref import flash_attention_ref
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "q_offset",
+                                             "block_q", "block_k",
+                                             "interpret"))
+def flash_attention(q, k, v, causal: bool = True, q_offset: int = 0,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool = None):
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return flash_attention_kernel(q, k, v, causal=causal,
+                                  q_offset=q_offset, block_q=block_q,
+                                  block_k=block_k, interpret=interpret)
+
+
+reference = flash_attention_ref

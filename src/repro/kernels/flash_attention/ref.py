@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for the flash-attention kernel (GQA, causal)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                        causal: bool = True,
+                        q_offset: int = 0) -> jax.Array:
+    """q [B,Sq,H,hd]; k/v [B,Skv,KV,hd] -> [B,Sq,H,hd] (f32 math)."""
+    b, sq, h, hd = q.shape
+    kv = k.shape[2]
+    g = h // kv
+    qg = q.reshape(b, sq, kv, g, hd).astype(jnp.float32)
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", qg,
+                        k.astype(jnp.float32)) / jnp.sqrt(float(hd))
+    if causal:
+        q_pos = jnp.arange(sq)[:, None] + q_offset
+        kv_pos = jnp.arange(k.shape[1])[None, :]
+        mask = kv_pos <= q_pos
+        scores = jnp.where(mask[None, None, None], scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", w, v.astype(jnp.float32))
+    return out.reshape(b, sq, h, hd).astype(q.dtype)

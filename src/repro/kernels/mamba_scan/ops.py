@@ -1,0 +1,22 @@
+"""Jitted public wrapper for the selective-scan kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.mamba_scan.kernel import mamba_scan_kernel
+from repro.kernels.mamba_scan.ref import mamba_scan_ref
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "block_c",
+                                             "interpret"))
+def mamba_scan(xc, dt, b, c, a_log, d, h0=None, chunk: int = 256,
+               block_c: int = 128, interpret: bool = None):
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return mamba_scan_kernel(xc, dt, b, c, a_log, d, h0, chunk=chunk,
+                             block_c=block_c, interpret=interpret)
+
+
+reference = mamba_scan_ref

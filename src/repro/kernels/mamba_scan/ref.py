@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for the selective-scan kernel: sequential recurrence."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def mamba_scan_ref(xc, dt, b, c, a_log, d, h0):
+    """xc,dt [B,S,di]; b,c [B,S,ds]; a_log [di,ds]; d [di]; h0 [B,di,ds]
+    -> (y [B,S,di], h_final)."""
+    a = -jnp.exp(a_log.astype(jnp.float32))
+
+    def step(h, inp):
+        x_t, dt_t, b_t, c_t = inp
+        decay = jnp.exp(dt_t[..., None] * a)             # [B,di,ds]
+        h = decay * h + (dt_t * x_t)[..., None] * b_t[:, None, :]
+        y = jnp.sum(h * c_t[:, None, :], -1) + x_t * d
+        return h, y
+
+    xs = (xc.astype(jnp.float32).transpose(1, 0, 2),
+          dt.astype(jnp.float32).transpose(1, 0, 2),
+          b.astype(jnp.float32).transpose(1, 0, 2),
+          c.astype(jnp.float32).transpose(1, 0, 2))
+    h_final, ys = jax.lax.scan(step, h0.astype(jnp.float32), xs)
+    return ys.transpose(1, 0, 2).astype(xc.dtype), h_final

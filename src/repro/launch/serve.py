@@ -1,0 +1,94 @@
+"""Serving launcher: intelligent-router cluster over real (reduced) JAX
+instances or the calibrated simulator.
+
+  # simulator cluster (paper experiments scale)
+  PYTHONPATH=src python -m repro.launch.serve --mode sim --requests 400
+
+  # real tiny engines on CPU
+  PYTHONPATH=src python -m repro.launch.serve --mode engine --requests 12
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import impact, rl_router as rl
+from repro.core.cluster_manager import ManagedCluster, ManagedClusterConfig
+from repro.core.profiles import V100_LLAMA2_7B
+from repro.core.workload import generate, to_requests
+from repro.models import params as params_lib
+from repro.serving.engine import LLMInstance
+from repro.serving.request import Request, summarize
+from repro.serving.scheduler import get_scheduler
+
+
+def serve_sim(args):
+    cfg = rl.RouterConfig(variant="guided", n_instances=args.instances,
+                          q_arch="decomposed", seed=0,
+                          explore_episodes=max(args.train_episodes - 3, 1),
+                          scheduler=args.scheduler,
+                          chunked_prefill=args.chunked_prefill)
+    out = rl.train(cfg, V100_LLAMA2_7B,
+                   lambda ep: to_requests(generate(args.requests, seed=ep),
+                                          rate=args.rate, seed=ep + 50),
+                   n_episodes=args.train_episodes)
+    mgr = ManagedCluster(ManagedClusterConfig(n_instances=args.instances),
+                         cfg, V100_LLAMA2_7B, out["agent"])
+    reqs = to_requests(generate(args.requests, seed=991), rate=args.rate,
+                       seed=992)
+    stats = mgr.serve(reqs)
+    print(f"served n={stats['n']} e2e={stats['e2e_mean']:.2f}s "
+          f"ttft={stats['ttft_mean']:.2f}s "
+          f"preemptions={stats['preemptions']}")
+
+
+def serve_engine(args):
+    cfg = get_config(args.arch).reduced()
+    prof = dataclasses.replace(V100_LLAMA2_7B, capacity_tokens=400)
+    params = params_lib.init_params(jax.random.PRNGKey(0), cfg)
+    insts = [LLMInstance(cfg, params, prof,
+                         get_scheduler(args.scheduler), n_slots=4,
+                         cache_len=128, instance_id=i)
+             for i in range(args.instances)]
+    rng = np.random.default_rng(0)
+    reqs = [Request(prompt_tokens=int(rng.integers(10, 80)),
+                    decode_tokens=int(rng.integers(5, 60)))
+            for _ in range(args.requests)]
+    for r in reqs:   # impact-heuristic routing (Eq. 1-2)
+        scores = impact.mixing_per_instance(
+            prof, r.prompt_tokens, r.decode_tokens,
+            [i.resident_tokens() for i in insts])
+        insts[int(np.argmax(scores))].submit(r)
+        for inst in insts:
+            inst.step()
+    while sum(len(i.completed) for i in insts) < len(reqs):
+        if not any(inst.queue or any(inst.slots) for inst in insts):
+            break
+        for inst in insts:
+            inst.step()
+    print(summarize(reqs))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mode", choices=("sim", "engine"), default="sim")
+    ap.add_argument("--arch", default="llama-2-7b")
+    ap.add_argument("--instances", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=400)
+    ap.add_argument("--rate", type=float, default=20.0)
+    ap.add_argument("--scheduler", default="fcfs")
+    ap.add_argument("--chunked-prefill", type=int, default=0)
+    ap.add_argument("--train-episodes", type=int, default=8)
+    args = ap.parse_args()
+    if args.mode == "sim":
+        serve_sim(args)
+    else:
+        serve_engine(args)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,171 @@
+"""Step builders + input_specs for the dry-run / launchers.
+
+``input_specs(cfg, shape)`` returns ShapeDtypeStruct stand-ins for every
+model input -- weak-type-correct, shardable, no device allocation.  The
+shape kinds map to the lowered step:
+
+  train    -> train_step(params, opt_state, batch)
+  prefill  -> prefill_step(params, batch)       (builds the KV cache)
+  decode   -> serve_step(params, cache, batch)  (one token vs a full cache)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.config import ModelConfig, ShapeConfig
+from repro.models import model as model_lib
+from repro.models import params as params_lib
+from repro.training import optimizer as opt_lib
+from repro.training.train_loop import make_train_step
+
+I32 = jnp.int32
+
+
+def _struct(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict:
+    """ShapeDtypeStructs for the step's data inputs."""
+    b, s = shape.global_batch, shape.seq_len
+    act_dtype = jnp.dtype(cfg.dtype)
+    if shape.kind == "train":
+        batch = {}
+        if cfg.input_mode == "tokens":
+            batch["tokens"] = _struct((b, s), I32)
+        else:
+            batch["embeds"] = _struct((b, s, cfg.d_model), act_dtype)
+        batch["labels"] = _struct((b, s), I32)
+        if cfg.vision_tokens:
+            batch["vision"] = _struct((b, cfg.vision_tokens,
+                                       cfg.vision_dim), act_dtype)
+        return batch
+    if shape.kind == "prefill":
+        batch = {}
+        if cfg.input_mode == "tokens":
+            batch["tokens"] = _struct((b, s), I32)
+        else:
+            batch["embeds"] = _struct((b, s, cfg.d_model), act_dtype)
+        if cfg.vision_tokens:
+            batch["vision"] = _struct((b, cfg.vision_tokens,
+                                       cfg.vision_dim), act_dtype)
+        return batch
+    # decode: one new token against an S-long cache
+    batch = {}
+    if cfg.input_mode == "tokens":
+        batch["tokens"] = _struct((b,), I32)
+    else:
+        batch["embeds"] = _struct((b, 1, cfg.d_model), act_dtype)
+    return batch
+
+
+def cache_specs(cfg: ModelConfig, shape: ShapeConfig):
+    return jax.eval_shape(
+        lambda: model_lib.init_cache(cfg, shape.global_batch,
+                                     shape.seq_len))
+
+
+def param_specs(cfg: ModelConfig, data_shards: int):
+    return params_lib.abstract_params(cfg, data_shards)
+
+
+def opt_specs(cfg: ModelConfig, data_shards: int, optimizer: str = "adamw"):
+    p = param_specs(cfg, data_shards)
+    if optimizer == "adafactor":
+        return jax.eval_shape(lambda: adafactor_init_abstract(p))
+    return jax.eval_shape(
+        lambda: {"mu": jax.tree.map(
+            lambda x: jnp.zeros(x.shape, jnp.float32), p),
+            "nu": jax.tree.map(
+                lambda x: jnp.zeros(x.shape, jnp.float32), p),
+            "step": jnp.zeros((), jnp.int32)})
+
+
+# -- Adafactor (factored second moments; the memory-feasible optimizer for
+#    the 314B-parameter cell on a 256-chip pod) ------------------------------
+
+def adafactor_init(params):
+    def one(p):
+        if p.ndim >= 2:
+            return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:],
+                                    jnp.float32)}
+        return {"v": jnp.zeros(p.shape, jnp.float32)}
+    return {"v": jax.tree.map(one, params,
+                              is_leaf=lambda x: hasattr(x, "ndim")),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def adafactor_init_abstract(params):
+    return adafactor_init(params)
+
+
+def adafactor_update(lr: float, grads, opt_state, params, eps: float = 1e-30,
+                     clip: float = 1.0):
+    step = opt_state["step"] + 1
+    beta2 = 1.0 - jnp.power(step.astype(jnp.float32), -0.8)
+
+    def one(g, st, p):
+        g = g.astype(jnp.float32)
+        g2 = g * g + eps
+        if p.ndim >= 2:
+            vr = beta2 * st["vr"] + (1 - beta2) * jnp.mean(g2, axis=-1)
+            vc = beta2 * st["vc"] + (1 - beta2) * jnp.mean(g2, axis=-2)
+            denom = jnp.sqrt(
+                vr[..., None] * vc[..., None, :]
+                / jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True)
+                              [..., None], eps))
+            upd = g / jnp.maximum(denom, 1e-12)
+            new_st = {"vr": vr, "vc": vc}
+        else:
+            v = beta2 * st["v"] + (1 - beta2) * g2
+            upd = g / jnp.sqrt(v + 1e-12)
+            new_st = {"v": v}
+        rms = jnp.sqrt(jnp.mean(upd * upd) + 1e-12)
+        upd = upd / jnp.maximum(1.0, rms / clip)
+        new_p = (p.astype(jnp.float32) - lr * upd).astype(p.dtype)
+        return new_p, new_st
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_s = treedef.flatten_up_to(opt_state["v"])
+    out = [one(g, s, p) for g, s, p in zip(flat_g, flat_s, flat_p)]
+    return (treedef.unflatten([o[0] for o in out]),
+            {"v": treedef.unflatten([o[1] for o in out]), "step": step})
+
+
+# -- step functions -----------------------------------------------------------
+
+def build_train_step(cfg: ModelConfig,
+                     optimizer: str = "adamw") -> Callable:
+    if optimizer == "adafactor":
+        from repro.training.train_loop import symmetrize_ep_grads
+
+        def train_step(params, opt_state, batch):
+            (loss, aux), grads = jax.value_and_grad(
+                model_lib.loss_fn, has_aux=True)(params, cfg, batch)
+            grads = symmetrize_ep_grads(cfg, grads)
+            params, opt_state = adafactor_update(1e-3, grads, opt_state,
+                                                 params)
+            return params, opt_state, {"loss": loss, **aux}
+        return train_step
+    return make_train_step(cfg, opt_lib.OptimizerConfig())
+
+
+def build_prefill_step(cfg: ModelConfig, shape: ShapeConfig) -> Callable:
+    def prefill_step(params, batch):
+        logits, cache = model_lib.prefill(params, cfg,
+                                          cache_len=shape.seq_len, **batch)
+        return logits, cache
+    return prefill_step
+
+
+def build_serve_step(cfg: ModelConfig) -> Callable:
+    def serve_step(params, cache, batch):
+        logits, cache = model_lib.decode_step(params, cfg, cache, **batch)
+        return logits, cache
+    return serve_step

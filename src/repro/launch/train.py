@@ -1,0 +1,70 @@
+"""Training launcher: auto-resuming train loop over any assigned arch.
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen3-0.6b \
+      --reduced --steps 100 --batch 8 --seq 64 --ckpt artifacts/train_ckpt
+
+On the production mesh this module is launched per-host by the cluster
+scheduler; the dry-run (repro.launch.dryrun) proves the full-scale
+lowering.  On CPU use --reduced for a smoke-scale run.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.training import checkpoint as ckpt_lib
+from repro.training import data as data_lib
+from repro.training import optimizer as opt_lib
+from repro.training.train_loop import init_train_state, make_train_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama-2-7b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    print(f"arch={cfg.name} params={cfg.count_params()/1e6:.2f}M")
+    params, opt_state = init_train_state(jax.random.PRNGKey(0), cfg)
+    start = 0
+    mgr = ckpt_lib.CheckpointManager(args.ckpt) if args.ckpt else None
+    if mgr is not None:
+        restored = mgr.restore({"params": params, "opt": opt_state})
+        if restored is not None:
+            state, extra = restored
+            params, opt_state = state["params"], state["opt"]
+            start = extra["step"]
+            print(f"resumed at step {start}")
+    step_fn = jax.jit(make_train_step(cfg, opt_lib.OptimizerConfig(
+        lr=args.lr, warmup_steps=20, total_steps=args.steps)))
+    loader = data_lib.PrefetchLoader(cfg, args.batch, args.seq, seed=0,
+                                     start_step=start)
+    t0 = time.time()
+    for i, (_, host_batch) in zip(range(start, args.steps), loader):
+        batch = {k: jnp.asarray(v) for k, v in host_batch.items()}
+        params, opt_state, m = step_fn(params, opt_state, batch)
+        if (i + 1) % 20 == 0 or i + 1 == args.steps:
+            print(f"step {i+1:5d} loss={float(m['loss']):.4f} "
+                  f"({(i+1-start)/(time.time()-t0):.2f} it/s)", flush=True)
+        if mgr is not None and (i + 1) % args.ckpt_every == 0:
+            mgr.save(i + 1, {"params": params, "opt": opt_state})
+    loader.close()
+    if mgr is not None:
+        mgr.close()
+
+
+if __name__ == "__main__":
+    main()

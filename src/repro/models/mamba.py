@@ -1,0 +1,146 @@
+"""Mamba-1 selective SSM block (falcon-mamba, jamba).
+
+Sequence processing uses a chunked scan: within a VMEM-sized chunk the
+diagonal recurrence h_t = a_t * h_{t-1} + b_t is evaluated with an
+associative scan; chunks are chained with lax.scan so the [B,S,di,ds]
+state tensor is never materialized for the full sequence.  The Pallas
+kernel in repro.kernels.mamba_scan implements the same chunking for TPU.
+
+Decode keeps O(1) state: a (d_conv-1)-deep conv window and the [di,ds] SSM
+state -- this is what makes the long_500k cell feasible for SSM/hybrid archs.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.config import ModelConfig
+
+
+def _ssm_inputs(p: Dict, cfg: ModelConfig, xc: jax.Array):
+    """xc [B,S,di] (post-conv, post-silu) -> dt, B, C."""
+    m, dtr = cfg.mamba, cfg.dt_rank
+    dbc = xc @ p["x_proj"]                              # [B,S,dtr+2ds]
+    dt = jax.nn.softplus(dbc[..., :dtr] @ p["dt_proj"]
+                         + p["dt_bias"].astype(jnp.float32))
+    b = dbc[..., dtr:dtr + m.d_state]
+    c = dbc[..., dtr + m.d_state:]
+    return dt, b, c
+
+
+def selective_scan(xc: jax.Array, dt: jax.Array, b: jax.Array, c: jax.Array,
+                   a_log: jax.Array, d: jax.Array, h0: jax.Array,
+                   chunk: int, unroll: bool = False
+                   ) -> Tuple[jax.Array, jax.Array]:
+    """Reference selective scan.  xc [B,S,di]; dt [B,S,di]; b,c [B,S,ds];
+    a_log [di,ds]; d [di]; h0 [B,di,ds] -> (y [B,S,di], h_final).
+
+    Everything (decay, drive, in-chunk associative scan, output readout)
+    is computed PER CHUNK inside the scan body -- the [B,S,di,ds] state
+    tensor never materializes for the full sequence (same structure as the
+    Pallas kernel; without this a 4k x 8192 x 16 train step allocates
+    ~100 GiB/device in f32)."""
+    from repro.distributed import context as dist_ctx
+    bsz, s, di = xc.shape
+    ds = b.shape[-1]
+    assert s % chunk == 0, (s, chunk)
+    n_chunks = s // chunk
+    a = -jnp.exp(a_log.astype(jnp.float32))            # [di,ds]
+
+    def chunked(t):
+        return t.reshape(bsz, n_chunks, chunk, *t.shape[2:]).transpose(
+            1, 0, 2, *range(3, t.ndim + 1))
+
+    xs = (chunked(xc), chunked(dt), chunked(b), chunked(c))
+
+    def combine(x, y):
+        ax, bx = x
+        ay, by = y
+        return ax * ay, ay * bx + by
+
+    @jax.checkpoint
+    def body(h, inp):
+        x_c, dt_c, b_c, c_c = inp                      # [B,chunk,...]
+        dt_f = dt_c.astype(jnp.float32)
+        decay = jnp.exp(dt_f[..., None] * a)           # [B,chunk,di,ds]
+        decay = dist_ctx.constrain_heads(decay, head_dim=2)
+        drive = (dt_f * x_c.astype(jnp.float32))[..., None] * \
+            b_c.astype(jnp.float32)[:, :, None, :]
+        drive = dist_ctx.constrain_heads(drive, head_dim=2)
+        a_cum, b_cum = jax.lax.associative_scan(combine, (decay, drive),
+                                                axis=1)
+        h_all = a_cum * h[:, None] + b_cum
+        h_all = dist_ctx.constrain_heads(h_all, head_dim=2)
+        y_c = jnp.sum(h_all * c_c.astype(jnp.float32)[:, :, None, :],
+                      axis=-1)
+        y_c = y_c + x_c.astype(jnp.float32) * d
+        return h_all[:, -1], y_c.astype(xc.dtype)
+
+    h_final, y_chunks = jax.lax.scan(body, h0.astype(jnp.float32), xs,
+                                     unroll=True if unroll else 1)
+    y = y_chunks.transpose(1, 0, 2, 3).reshape(bsz, s, di)
+    return y, h_final
+
+
+def _causal_conv(p: Dict, x: jax.Array, state: jax.Array | None):
+    """Depthwise causal conv1d.  x [B,S,di]; state [B,dc-1,di] or None."""
+    w = p["conv_w"].astype(jnp.float32)                # [dc,di]
+    dc = w.shape[0]
+    xf = x.astype(jnp.float32)
+    if state is None:
+        pad = jnp.zeros((x.shape[0], dc - 1, x.shape[2]), jnp.float32)
+    else:
+        pad = state.astype(jnp.float32)
+    xp = jnp.concatenate([pad, xf], axis=1)            # [B,S+dc-1,di]
+    out = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(dc))
+    out = out + p["conv_b"].astype(jnp.float32)
+    new_state = xp[:, -(dc - 1):] if dc > 1 else pad[:, :0]
+    return out.astype(x.dtype), new_state.astype(x.dtype)
+
+
+def mamba_seq(p: Dict, cfg: ModelConfig, x: jax.Array,
+              use_pallas: bool = False):
+    """Full-sequence mamba block.  x [B,S,d] -> (y [B,S,d], (conv_state,
+    ssm_state)) final states for cache handoff."""
+    m = cfg.mamba
+    xz = x @ p["in_proj"]
+    xi, z = jnp.split(xz, 2, axis=-1)
+    xc, conv_state = _causal_conv(p, xi, None)
+    xc = jax.nn.silu(xc)
+    dt, bmat, cmat = _ssm_inputs(p, cfg, xc)
+    h0 = jnp.zeros((x.shape[0], m.d_inner, m.d_state), jnp.float32)
+    if use_pallas or cfg.use_pallas:
+        from repro.kernels.mamba_scan import ops as ms_ops
+        y, h_final = ms_ops.mamba_scan(xc, dt, bmat, cmat, p["A_log"],
+                                       p["D"], h0, chunk=m.chunk)
+    else:
+        chunk = min(m.chunk, x.shape[1])
+        y, h_final = selective_scan(xc, dt, bmat, cmat, p["A_log"], p["D"],
+                                    h0, chunk, unroll=cfg.scan_unroll)
+    y = y * jax.nn.silu(z)
+    return y @ p["out_proj"], {"conv": conv_state,
+                               "ssm": h_final.astype(x.dtype)}
+
+
+def mamba_decode(p: Dict, cfg: ModelConfig, x: jax.Array, cache: Dict):
+    """Single-token step.  x [B,1,d]; cache = {conv [B,dc-1,di],
+    ssm [B,di,ds]}."""
+    m = cfg.mamba
+    conv_state, h = cache["conv"], cache["ssm"]
+    xz = x @ p["in_proj"]
+    xi, z = jnp.split(xz, 2, axis=-1)                  # [B,1,di]
+    xc, conv_state = _causal_conv(p, xi, conv_state)
+    xc = jax.nn.silu(xc)
+    dt, bmat, cmat = _ssm_inputs(p, cfg, xc)
+    a = -jnp.exp(p["A_log"].astype(jnp.float32))
+    dtf = dt[:, 0].astype(jnp.float32)                 # [B,di]
+    decay = jnp.exp(dtf[..., None] * a)                # [B,di,ds]
+    drive = (dtf * xc[:, 0].astype(jnp.float32))[..., None] * \
+        bmat[:, 0].astype(jnp.float32)[:, None, :]
+    h = decay * h.astype(jnp.float32) + drive
+    y = jnp.sum(h * cmat[:, 0].astype(jnp.float32)[:, None, :], axis=-1)
+    y = y + xc[:, 0].astype(jnp.float32) * p["D"]
+    y = (y.astype(x.dtype) * jax.nn.silu(z[:, 0]))[:, None]
+    return y @ p["out_proj"], {"conv": conv_state, "ssm": h.astype(x.dtype)}

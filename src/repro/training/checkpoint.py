@@ -1,0 +1,165 @@
+"""Fault-tolerant checkpointing: msgpack + zstd pytrees, atomic rename,
+per-leaf CRC32 integrity, async writer thread, latest-pointer restart.
+
+Layout:
+  <dir>/step_000042.ckpt      (zstd-compressed msgpack)
+  <dir>/latest                (text file: "step_000042.ckpt")
+"""
+from __future__ import annotations
+
+import os
+import queue
+import threading
+import zlib
+from typing import Any, Dict, Optional, Tuple
+
+import msgpack
+import numpy as np
+import zstandard
+
+import jax
+
+
+def _flatten(tree) -> Dict[str, Any]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(
+            str(getattr(k, "key", getattr(k, "idx", "?"))) for k in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def _treedef(tree):
+    return jax.tree_util.tree_structure(tree)
+
+
+def serialize(tree, extra: Optional[Dict[str, Any]] = None) -> bytes:
+    flat = _flatten(tree)
+    payload = {"leaves": {}, "extra": extra or {}}
+    for k, arr in flat.items():
+        buf = arr.tobytes()
+        payload["leaves"][k] = {
+            "dtype": str(arr.dtype), "shape": list(arr.shape),
+            "crc": zlib.crc32(buf), "data": buf,
+        }
+    packed = msgpack.packb(payload, use_bin_type=True)
+    return zstandard.ZstdCompressor(level=3).compress(packed)
+
+
+def deserialize(blob: bytes, like_tree) -> Tuple[Any, Dict[str, Any]]:
+    packed = zstandard.ZstdDecompressor().decompress(blob)
+    payload = msgpack.unpackb(packed, raw=False)
+    leaves_by_key = {}
+    for k, rec in payload["leaves"].items():
+        buf = rec["data"]
+        if zlib.crc32(buf) != rec["crc"]:
+            raise IOError(f"checkpoint leaf {k!r} failed CRC check")
+        leaves_by_key[k] = np.frombuffer(
+            buf, dtype=np.dtype(rec["dtype"])).reshape(rec["shape"])
+    flat_like = _flatten(like_tree)
+    if set(flat_like) != set(leaves_by_key):
+        missing = set(flat_like) ^ set(leaves_by_key)
+        raise IOError(f"checkpoint tree mismatch: {sorted(missing)[:5]}")
+    ordered = []
+    for path, leaf in jax.tree_util.tree_flatten_with_path(like_tree)[0]:
+        key = "/".join(
+            str(getattr(k, "key", getattr(k, "idx", "?"))) for k in path)
+        arr = leaves_by_key[key]
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise IOError(f"shape mismatch at {key}: {arr.shape} vs "
+                          f"{leaf.shape}")
+        ordered.append(arr)
+    tree = jax.tree_util.tree_unflatten(_treedef(like_tree), ordered)
+    return tree, payload["extra"]
+
+
+class CheckpointManager:
+    """Async, atomic checkpointing with restart support."""
+
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._q: queue.Queue = queue.Queue()
+        self._err: Optional[BaseException] = None
+        self._thread = threading.Thread(target=self._worker, daemon=True)
+        self._thread.start()
+
+    # -- writing ----------------------------------------------------------
+    def save(self, step: int, tree, extra: Optional[Dict] = None,
+             sync: bool = False):
+        # device->host transfer happens on the caller thread (cheap, and
+        # keeps the device free); compression+IO happen on the writer thread.
+        host_tree = jax.tree.map(np.asarray, tree)
+        self._q.put((step, host_tree, extra))
+        if sync:
+            self.wait()
+
+    def _worker(self):
+        while True:
+            item = self._q.get()
+            if item is None:
+                self._q.task_done()
+                return
+            step, tree, extra = item
+            try:
+                self._write(step, tree, extra)
+            except BaseException as e:       # surfaced on wait()
+                self._err = e
+            finally:
+                self._q.task_done()
+
+    def _write(self, step: int, tree, extra):
+        name = f"step_{step:09d}.ckpt"
+        blob = serialize(tree, {"step": step, **(extra or {})})
+        tmp = os.path.join(self.dir, f".tmp.{name}")
+        with open(tmp, "wb") as f:
+            f.write(blob)
+            f.flush()
+            os.fsync(f.fileno())
+        os.rename(tmp, os.path.join(self.dir, name))   # atomic
+        ptr_tmp = os.path.join(self.dir, ".tmp.latest")
+        with open(ptr_tmp, "w") as f:
+            f.write(name)
+        os.rename(ptr_tmp, os.path.join(self.dir, "latest"))
+        self._gc()
+
+    def _gc(self):
+        ckpts = sorted(p for p in os.listdir(self.dir)
+                       if p.startswith("step_"))
+        for old in ckpts[:-self.keep]:
+            os.unlink(os.path.join(self.dir, old))
+
+    def wait(self):
+        self._q.join()
+        if self._err:
+            err, self._err = self._err, None
+            raise err
+
+    def close(self):
+        self.wait()
+        self._q.put(None)
+        self._thread.join(timeout=5)
+
+    # -- restart ----------------------------------------------------------
+    def latest_step(self) -> Optional[int]:
+        ptr = os.path.join(self.dir, "latest")
+        if not os.path.exists(ptr):
+            return None
+        with open(ptr) as f:
+            name = f.read().strip()
+        return int(name.split("_")[1].split(".")[0])
+
+    def restore(self, like_tree) -> Optional[Tuple[Any, Dict]]:
+        """Restore the newest intact checkpoint (falls back through older
+        ones if the newest is corrupt -- crash-during-write tolerance)."""
+        ckpts = sorted((p for p in os.listdir(self.dir)
+                        if p.startswith("step_")), reverse=True)
+        for name in ckpts:
+            try:
+                with open(os.path.join(self.dir, name), "rb") as f:
+                    return deserialize(f.read(), like_tree)
+            except (IOError, ValueError, msgpack.UnpackException,
+                    zstandard.ZstdError):
+                continue
+        return None

@@ -1,0 +1,70 @@
+"""Train-step construction: grads, EP replica symmetrization, optional
+int8 gradient compression, AdamW update.  The step is a single pjit-able
+function (params/opt donated)."""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.config import ModelConfig
+from repro.models import model as model_lib
+from repro.training import optimizer as opt_lib
+
+
+def symmetrize_ep_grads(cfg: ModelConfig, grads):
+    """Average gradients across EP replica slots.
+
+    When E < n_ep_shards, routed expert weights are stored replicated
+    (slot s holds expert s // R); the replicas receive different gradients
+    (they saw different tokens) and must be re-synchronized.
+    """
+    if cfg.moe is None or cfg.moe.impl != "ep":
+        return grads
+    e = cfg.moe.n_experts
+
+    def one(path, g):
+        names = [str(getattr(k, "key", "")) for k in path]
+        if "routed" not in names or names[-1] not in ("w_up", "w_down",
+                                                      "w_gate"):
+            return g
+        ax = 1 if "layers" in names else 0
+        e_store = g.shape[ax]
+        if e_store == e:
+            return g
+        r = e_store // e
+        shape = g.shape
+        grouped = g.reshape(shape[:ax] + (e, r) + shape[ax + 1:])
+        mean = jnp.mean(grouped, axis=ax + 1, keepdims=True)
+        return jnp.broadcast_to(mean, grouped.shape).reshape(shape)
+
+    return jax.tree_util.tree_map_with_path(one, grads)
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: opt_lib.OptimizerConfig,
+                    compress_grads: Optional[Callable] = None
+                    ) -> Callable:
+    """Returns train_step(params, opt_state, batch) -> (params, opt_state,
+    metrics).  ``compress_grads`` optionally maps the grad tree through a
+    (quantize -> all-reduce -> dequantize) hook."""
+
+    def train_step(params, opt_state, batch):
+        (loss, aux), grads = jax.value_and_grad(
+            model_lib.loss_fn, has_aux=True)(params, cfg, batch)
+        if compress_grads is not None:
+            grads = compress_grads(grads)
+        grads = symmetrize_ep_grads(cfg, grads)
+        params, opt_state, metrics = opt_lib.update(
+            opt_cfg, grads, opt_state, params)
+        metrics.update({"loss": loss, **aux})
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def init_train_state(key, cfg: ModelConfig, data_shards: int = 0):
+    from repro.models import params as params_lib
+    params = params_lib.init_params(key, cfg, data_shards)
+    return params, opt_lib.init(params)

@@ -1,0 +1,32 @@
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+# NOTE: do NOT set xla_force_host_platform_device_count here -- smoke tests
+# and benches must see 1 device; multi-device tests spawn subprocesses.
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(REPO, "src")
+
+
+def run_subprocess(code: str, devices: int = 8) -> str:
+    """Run python code in a fresh interpreter with N host devices."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = SRC
+    out = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(code)],
+        env=env, capture_output=True, text=True, timeout=900)
+    if out.returncode != 0:
+        raise AssertionError(
+            f"subprocess failed:\nSTDOUT:\n{out.stdout}\n"
+            f"STDERR:\n{out.stderr}")
+    return out.stdout
+
+
+@pytest.fixture
+def subproc():
+    return run_subprocess

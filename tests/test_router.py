@@ -1,0 +1,151 @@
+"""Router-core unit tests: impact estimator (Eq. 1-2), bucket edges,
+heuristic policies, DQN machinery, guidance properties."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import impact
+from repro.core.profiles import V100_LLAMA2_7B, fit, tpu_v5e_profile
+from repro.core.workload import generate, to_requests, table1_stats
+
+PROF = V100_LLAMA2_7B
+
+
+def test_eq1_prefill_penalty():
+    # empty instance, tiny prompt: no penalty
+    assert impact.prefill_penalty(PROF, 10, 0.0) == 1.0
+    # T_p = grad1 * p^2 crossing epsilon turns into 1 - T/eps
+    p = int((PROF.epsilon / PROF.grad1) ** 0.5) + 10
+    t_p = impact.prefill_impact(PROF, p, 0.0)
+    assert t_p > PROF.epsilon
+    assert impact.prefill_penalty(PROF, p, 0.0) == pytest.approx(
+        1.0 - t_p / PROF.epsilon)
+
+
+def test_eq2_decode_penalty_monotone():
+    r1 = impact.decode_penalty(PROF, 100, 100, 0.0)
+    r2 = impact.decode_penalty(PROF, 100, 100, 10_000.0)
+    assert r2 < r1 <= 0.0
+
+
+@given(p=st.integers(1, 1000), d=st.integers(1, 4000),
+       load_a=st.floats(0, 60000), load_b=st.floats(0, 60000))
+@settings(max_examples=200, deadline=None)
+def test_mixing_prefers_lighter_instance(p, d, load_a, load_b):
+    """r_mixing is monotonically worse with resident tokens -- the router
+    heuristic always prefers the lighter instance."""
+    scores = impact.mixing_per_instance(PROF, p, d, [load_a, load_b])
+    if load_a < load_b:
+        assert scores[0] >= scores[1]
+    elif load_b < load_a:
+        assert scores[1] >= scores[0]
+
+
+@given(p=st.integers(1, 1000), d=st.integers(1, 4000),
+       loads=st.lists(st.floats(0, 50000), min_size=2, max_size=8),
+       chosen=st.integers(0, 7))
+@settings(max_examples=100, deadline=None)
+def test_guidance_h_nonpositive_and_zero_at_best(p, d, loads, chosen):
+    chosen = chosen % len(loads)
+    h = impact.guidance_h(PROF, p, d, loads, chosen)
+    assert h <= 1e-9
+    best = int(np.argmax(impact.mixing_per_instance(PROF, p, d, loads)))
+    assert impact.guidance_h(PROF, p, d, loads, best) == pytest.approx(0.0)
+
+
+def test_bucket_edges_time_aligned():
+    """Bucket edges follow the 0.5 * 4^k second boundaries (§5.1)."""
+    edges = PROF.bucket_edges(5)
+    tok_per_s = 1.0 / PROF.t_decode_base
+    np.testing.assert_allclose(
+        edges, [0.5 * 4 ** k * tok_per_s for k in range(4)])
+    assert PROF.bucketize(1) == 0
+    assert PROF.bucketize(int(edges[0]) + 1) == 1
+
+
+def test_classification_thresholds():
+    # 0.5s prompt, 5s decode thresholds
+    p_heavy = int(PROF.heavy_prompt_s / PROF.grad1) + 1
+    d_heavy = int(PROF.heavy_decode_s / PROF.t_decode_base) + 1
+    assert PROF.classify(p_heavy, d_heavy) == "HH"
+    assert PROF.classify(p_heavy - 50, d_heavy) == "LH"
+    assert PROF.classify(p_heavy, d_heavy - 50) == "HL"
+    assert PROF.classify(10, 10) == "LL"
+
+
+def test_profile_fit_recovers_gradients():
+    rng = np.random.default_rng(0)
+    g1, g2, base = 3.2e-4, 3.3e-5, 0.0167
+    pre = [(int(p), g1 * p + rng.normal(0, 1e-4))
+           for p in rng.integers(10, 1000, 50)]
+    dec = [(int(t), base + g2 * t + rng.normal(0, 1e-4))
+           for t in rng.integers(100, 4000, 50)]
+    prof = fit(pre, dec)
+    assert abs(prof.grad1 - g1) / g1 < 0.05
+    assert abs(prof.grad2 - g2) / g2 < 0.05
+
+
+def test_tpu_profile_analytic():
+    prof = tpu_v5e_profile(7e9, tp=16)
+    # 7B bf16 weights over 16 chips: decode step time ~ weight read time
+    assert 1e-4 < prof.t_decode_base < 2e-2
+    assert prof.grad1 < prof.t_decode_base   # prefill/token < decode step
+
+
+def test_workload_matches_table1():
+    samples = generate(6000, seed=0)
+    stats = table1_stats(samples, PROF)
+    # Table 1: imdb (sentiment) has the longest prompts; eli5 (qna) the
+    # longest decodes.
+    assert stats["sentiment"]["prompt_mean"] > \
+        2 * stats["qna"]["prompt_mean"]
+    assert stats["qna"]["decode_mean"] > \
+        2 * stats["translation"]["decode_mean"]
+    # heavy-decode share ordering: qna >> entity/translation
+    assert stats["qna"]["heavy_decode"] > stats["entity"]["heavy_decode"]
+    for t, row in stats.items():
+        assert row["prompt_mean"] <= 1000
+
+
+def test_dqn_learns_trivial_contextual_bandit():
+    from repro.core.dqn import DQNAgent, DQNConfig
+    cfg = DQNConfig(state_dim=4, n_actions=2, hidden=(32, 32), gamma=0.0,
+                    lr=1e-2, batch_size=64, buffer_size=5000, tau=0.05,
+                    center_rewards=False)
+    agent = DQNAgent(cfg, seed=0)
+    rng = np.random.default_rng(0)
+    mask = np.ones(2, bool)
+    for i in range(600):
+        s = rng.standard_normal(4).astype(np.float32)
+        a = agent.act(s, mask, epsilon=0.3)
+        r = 1.0 if (a == (s[0] > 0)) else -1.0
+        agent.observe(s, a, r, s, 1.0, mask)
+        agent.learn()
+    correct = 0
+    for _ in range(200):
+        s = rng.standard_normal(4).astype(np.float32)
+        a = agent.act(s, mask, epsilon=0.0)
+        correct += int(a == (s[0] > 0))
+    assert correct > 160
+
+
+def test_decomposed_q_permutation_equivariance():
+    """Swapping two instances' feature blocks swaps their Q values."""
+    from repro.core.dqn import DQNConfig, apply_q, init_q
+    import jax
+    import jax.numpy as jnp
+    inst, router, m = 9, 4, 4
+    cfg = DQNConfig(state_dim=inst * m + router, n_actions=m + 1,
+                    q_arch="decomposed", inst_dims=inst,
+                    router_dims=router)
+    params = init_q(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    s = rng.standard_normal((1, inst * m + router)).astype(np.float32)
+    q = np.asarray(apply_q(cfg, params, jnp.asarray(s)))[0]
+    s2 = s.copy()
+    s2[0, :inst], s2[0, inst:2 * inst] = (s[0, inst:2 * inst].copy(),
+                                          s[0, :inst].copy())
+    q2 = np.asarray(apply_q(cfg, params, jnp.asarray(s2)))[0]
+    np.testing.assert_allclose(q[0], q2[1], rtol=1e-5)
+    np.testing.assert_allclose(q[1], q2[0], rtol=1e-5)
+    np.testing.assert_allclose(q[4], q2[4], rtol=1e-5)   # defer invariant
