@@ -1,0 +1,114 @@
+"""Batched multi-episode RL training throughput vs the sequential baseline.
+
+Trains the guided router over the SAME 16-episode schedule (V100 x4,
+Table-1 mixture, 200 requests @ 20 rps, identical workload seeds and
+exploration decay) with (a) the sequential per-decision loop
+(`rl_router.train`) and (b) the batched runner at 8 parallel episodes
+(`batched_rl.train_batched`), and reports episodes/sec for each plus the
+speedup.  Also reports heterogeneous-scenario throughput (mixed
+hardware, bursty/diurnal arrivals) and a held-out quality check of the
+batched-trained policy against round robin.
+
+Acceptance: the batched runner must be >= 3x the sequential baseline at
+8 parallel episodes on CPU.
+"""
+from __future__ import annotations
+
+import os
+
+# One intra-op XLA thread: the batched runner overlaps the async learner
+# with simulator Python, so XLA must not fight the Python thread for
+# cores.  Must be set before jax initializes -- benchmarks/run.py runs
+# each bench in a fresh interpreter, so this only affects this bench.
+os.environ.setdefault(
+    "XLA_FLAGS",
+    "--xla_cpu_multi_thread_eigen=false intra_op_parallelism_threads=1")
+
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core import batched_rl, rl_router as rl
+from repro.core.policies import make_policy
+from repro.core.profiles import V100_LLAMA2_7B
+from repro.core.simulator import Cluster, run_heuristic
+from repro.core.workload import Scenario, generate, scenario_stream, \
+    to_requests
+
+PROF = V100_LLAMA2_7B
+N, RATE, M = 200, 20.0, 4
+EPISODES = 16
+N_ENVS = 8
+EVAL_SEEDS = (991, 992)
+
+
+def _reqs(seed):
+    return to_requests(generate(N, seed=seed), rate=RATE, seed=seed + 5000)
+
+
+def _scenario(ep):
+    return Scenario.homogeneous(PROF, M, _reqs(100 + ep),
+                                name=f"paper-{ep}")
+
+
+def _cfg():
+    return rl.RouterConfig(variant="guided", n_instances=M,
+                           explore_episodes=8, q_arch="decomposed", seed=0)
+
+
+def main():
+    bcfg = batched_rl.BatchedRLConfig(n_envs=N_ENVS, m_max=M)
+    # warmup: compile q_values (batch 1 and N_ENVS) + both learner shapes
+    rl.train(_cfg(), PROF, lambda ep: _reqs(900 + ep), 1)
+    batched_rl.train_batched(_cfg(), _scenario, N_ENVS, bcfg=bcfg)
+
+    t0 = time.time()
+    rl.train(_cfg(), PROF, lambda ep: _reqs(100 + ep), EPISODES)
+    dt_seq = time.time() - t0
+    seq_eps = EPISODES / dt_seq
+
+    t0 = time.time()
+    out = batched_rl.train_batched(_cfg(), _scenario, EPISODES, bcfg=bcfg)
+    dt_bat = time.time() - t0
+    bat_eps = EPISODES / dt_bat
+
+    speedup = bat_eps / seq_eps
+    emit("batched_rl_sequential_eps_per_s", dt_seq / EPISODES * 1e6,
+         f"{seq_eps:.2f}")
+    emit("batched_rl_batched8_eps_per_s", dt_bat / EPISODES * 1e6,
+         f"{bat_eps:.2f}")
+    emit("batched_rl_speedup_at_8", 0.0, f"{speedup:.2f}x")
+
+    # quality guard: the batched-trained guided policy must stay
+    # competitive with round robin on held-out episodes (the sequential
+    # path's quality is gated separately by bench_fig1b_rl)
+    rr = float(np.mean([run_heuristic(
+        Cluster(PROF, M), _reqs(sd),
+        make_policy("round_robin", PROF))["e2e_mean"]
+        for sd in EVAL_SEEDS]))
+    bat = float(np.mean([batched_rl.evaluate_scenarios(
+        _cfg(), out["agent"],
+        [Scenario.homogeneous(PROF, M, _reqs(sd))])[0]["e2e_mean"]
+        for sd in EVAL_SEEDS]))
+    emit("batched_rl_quality_e2e_s", 0.0,
+         f"{bat:.2f}(rr={rr:.2f})")
+
+    # heterogeneous stream throughput (mixed hardware + arrival patterns)
+    t0 = time.time()
+    het = batched_rl.train_batched(
+        _cfg(), scenario_stream(0, n_requests=N), EPISODES,
+        bcfg=batched_rl.BatchedRLConfig(n_envs=N_ENVS, m_max=6))
+    dt_het = time.time() - t0
+    n_done = sum(h["n"] for h in het["history"])
+    emit("batched_rl_hetero_eps_per_s", dt_het / EPISODES * 1e6,
+         f"{EPISODES / dt_het:.2f}({n_done}reqs)")
+
+    assert speedup >= 3.0, (
+        f"batched runner speedup {speedup:.2f}x < 3x at {N_ENVS} envs")
+    assert bat <= rr * 1.25, (
+        f"batched-trained policy collapsed: e2e {bat:.2f} vs RR {rr:.2f}")
+
+
+if __name__ == "__main__":
+    main()

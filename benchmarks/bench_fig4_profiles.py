@@ -5,7 +5,6 @@ gradients; asserts the linear structure the paper profiles (prefill fast
 and linear, decode slow growth)."""
 from __future__ import annotations
 
-import numpy as np
 
 from benchmarks.common import emit, timed
 from repro.core.profiles import V100_LLAMA2_7B, fit

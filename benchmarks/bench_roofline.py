@@ -27,7 +27,8 @@ def main():
              d.get("compile_s", 0) * 1e6,
              f"c={d['compute_s']*1e3:.2f}ms_m={d['memory_s']*1e3:.2f}ms_"
              f"x={d['collective_s']*1e3:.2f}ms_dom={dom}_"
-             f"useful={frac:.2f}_peak={d['peak_bytes_per_device']/2**30:.1f}GiB")
+             f"useful={frac:.2f}"
+             f"_peak={d['peak_bytes_per_device']/2**30:.1f}GiB")
 
 
 if __name__ == "__main__":

@@ -2,14 +2,24 @@
 
 Prints ``name,us_per_call,derived`` CSV rows.
 
-  PYTHONPATH=src python -m benchmarks.run            # all
-  PYTHONPATH=src python -m benchmarks.run fig1b ...  # subset
+  PYTHONPATH=src python -m benchmarks.run                 # all
+  PYTHONPATH=src python -m benchmarks.run fig1b ...       # subset
+  PYTHONPATH=src python -m benchmarks.run --json out.json # machine-readable
+
+Each bench module runs in a FRESH interpreter so (a) one bench's crash
+cannot poison the rest, (b) per-bench env (e.g. bench_batched_rl's
+XLA_FLAGS) applies cleanly, and (c) wall time is attributed honestly.
+Any failing module makes the harness exit non-zero.  ``--json PATH``
+additionally writes {results: [{bench, ok, seconds, rows: [...]}],
+failures: [...]} for perf-trajectory tracking across commits.
 """
 from __future__ import annotations
 
+import json
+import os
+import subprocess
 import sys
 import time
-import traceback
 
 MODULES = [
     ("fig4", "benchmarks.bench_fig4_profiles"),
@@ -17,6 +27,7 @@ MODULES = [
     ("table2", "benchmarks.bench_table2_grid"),
     ("table1", "benchmarks.bench_table1_predictor"),
     ("fig1b", "benchmarks.bench_fig1b_rl"),
+    ("batched_rl", "benchmarks.bench_batched_rl"),
     ("fig5", "benchmarks.bench_fig5_metrics"),
     ("table3", "benchmarks.bench_table3_chunking"),
     ("scale_trace", "benchmarks.bench_scale_trace"),
@@ -24,21 +35,65 @@ MODULES = [
 ]
 
 
+def _parse_rows(stdout: str):
+    rows = []
+    for line in stdout.splitlines():
+        parts = line.split(",", 2)
+        if len(parts) == 3 and not line.startswith(("#", "name,")):
+            rows.append({"name": parts[0], "us_per_call": parts[1],
+                         "derived": parts[2]})
+    return rows
+
+
 def main() -> None:
-    only = set(sys.argv[1:])
+    args = sys.argv[1:]
+    json_path = None
+    if "--json" in args:
+        i = args.index("--json")
+        try:
+            json_path = args[i + 1]
+        except IndexError:
+            print("usage: run.py [--json PATH] [bench ...]",
+                  file=sys.stderr)
+            sys.exit(2)
+        del args[i:i + 2]
+    only = set(args)
+    unknown = only - {k for k, _ in MODULES}
+    if unknown:
+        print(f"unknown benches: {sorted(unknown)} "
+              f"(known: {[k for k, _ in MODULES]})", file=sys.stderr)
+        sys.exit(2)
     print("name,us_per_call,derived")
+    results = []
     failures = []
+    env = dict(os.environ)
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    src = os.path.join(repo, "src")
+    env["PYTHONPATH"] = src + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
     for key, mod_name in MODULES:
         if only and key not in only:
             continue
         t0 = time.time()
-        try:
-            mod = __import__(mod_name, fromlist=["main"])
-            mod.main()
-            print(f"# {key} ok in {time.time()-t0:.1f}s", flush=True)
-        except Exception as e:
-            traceback.print_exc()
-            failures.append((key, repr(e)))
+        proc = subprocess.run(
+            [sys.executable, "-m", mod_name],
+            env=env, cwd=repo, capture_output=True, text=True)
+        dt = time.time() - t0
+        sys.stdout.write(proc.stdout)
+        ok = proc.returncode == 0
+        if ok:
+            print(f"# {key} ok in {dt:.1f}s", flush=True)
+        else:
+            sys.stderr.write(proc.stderr)
+            failures.append((key, f"exit {proc.returncode}"))
+            print(f"# {key} FAILED in {dt:.1f}s", flush=True)
+        results.append({"bench": key, "ok": ok,
+                        "seconds": round(dt, 2),
+                        "rows": _parse_rows(proc.stdout)})
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump({"results": results, "failures": failures}, f,
+                      indent=2)
     if failures:
         print("# FAILURES:", failures)
         sys.exit(1)

@@ -1,17 +1,30 @@
 """Train the workload-guided RL router (paper §5.3/§6) in the calibrated
 cluster simulator and compare against round-robin + heuristics.
 
+By default training uses the batched multi-episode runner (8 concurrent
+episodes, one shared replay buffer, async learner); pass --sequential
+for the paper-faithful per-decision loop.  --hetero trains on the
+heterogeneous scenario stream (mixed V100/A100 clusters, bursty and
+diurnal arrivals) instead of the fixed paper setup.
+
   PYTHONPATH=src python examples/train_router_rl.py [n_episodes]
+      [--sequential] [--hetero]
 """
+import os
 import sys
+import time
 
-import numpy as np
+os.environ.setdefault(
+    "XLA_FLAGS",
+    "--xla_cpu_multi_thread_eigen=false intra_op_parallelism_threads=1")
 
-from repro.core import rl_router as rl
-from repro.core.policies import make_policy
-from repro.core.profiles import V100_LLAMA2_7B
-from repro.core.simulator import Cluster, run_heuristic
-from repro.core.workload import generate, to_requests
+from repro.core import batched_rl, rl_router as rl          # noqa: E402
+from repro.core.policies import make_policy                 # noqa: E402
+from repro.core.profiles import V100_LLAMA2_7B              # noqa: E402
+from repro.core.simulator import Cluster, run_heuristic     # noqa: E402
+from repro.core.workload import (Scenario, generate,        # noqa: E402
+                                 scenario_stream, to_requests)
+from repro.training.train_loop import train_router          # noqa: E402
 
 PROF = V100_LLAMA2_7B
 N, RATE, M = 400, 20.0, 4
@@ -22,7 +35,10 @@ def reqs(seed):
 
 
 if __name__ == "__main__":
-    episodes = int(sys.argv[1]) if len(sys.argv) > 1 else 12
+    args = [a for a in sys.argv[1:] if not a.startswith("--")]
+    episodes = int(args[0]) if args else 12
+    sequential = "--sequential" in sys.argv
+    hetero = "--hetero" in sys.argv
     for name in ("round_robin", "jsq", "impact_greedy"):
         st = run_heuristic(Cluster(PROF, M), reqs(991),
                            make_policy(name, PROF))
@@ -31,9 +47,24 @@ if __name__ == "__main__":
     cfg = rl.RouterConfig(variant="guided", n_instances=M,
                           explore_episodes=max(episodes - 4, 2),
                           q_arch="decomposed", seed=0)
-    out = rl.train(cfg, PROF, lambda ep: reqs(100 + ep), episodes,
-                   valid_fn=lambda: reqs(555), verbose=True)
-    st = rl.evaluate(cfg, PROF, out["agent"], reqs(991))
+    if hetero:
+        scen_fn = scenario_stream(0, n_requests=N)
+        bcfg = batched_rl.BatchedRLConfig(m_max=6)
+    else:
+        scen_fn = lambda ep: Scenario.homogeneous(     # noqa: E731
+            PROF, M, reqs(100 + ep), name=f"paper-{ep}")
+        bcfg = batched_rl.BatchedRLConfig(m_max=M)
+    t0 = time.time()
+    out = train_router(
+        cfg, scen_fn, episodes, batched=not sequential, batch_cfg=bcfg,
+        valid_fn=lambda: Scenario.homogeneous(PROF, M, reqs(555)),
+        verbose=True)
+    dt = time.time() - t0
+    mode = "sequential" if sequential else "batched"
+    print(f"[{mode}] {episodes} episodes in {dt:.1f}s "
+          f"({episodes / dt:.2f} eps/s)")
+    st = batched_rl.evaluate_scenarios(
+        cfg, out["agent"], [Scenario.homogeneous(PROF, M, reqs(991))])[0]
     print(f"{'rl_guided':16s} e2e={st['e2e_mean']:7.2f}s "
           f"ttft={st['ttft_mean']:6.2f}s preempt={st['preemptions']} "
           f"router_wait={st['router_wait_mean']:.2f}s")

@@ -1,0 +1,21 @@
+"""jax version compatibility (the repo supports jax>=0.4.30).
+
+Centralizes the handful of symbols whose home moved between jax 0.4 and
+0.5/0.6 so call sites stay clean.
+"""
+from __future__ import annotations
+
+import jax
+
+if hasattr(jax, "shard_map"):            # jax >= 0.6
+    shard_map = jax.shard_map
+else:                                    # jax 0.4.x
+    from jax.experimental.shard_map import shard_map as _shard_map_04
+
+    def shard_map(f=None, /, **kw):
+        # the replication-check kwarg was renamed check_rep -> check_vma
+        if "check_vma" in kw:
+            kw["check_rep"] = kw.pop("check_vma")
+        if f is None:
+            return lambda g: _shard_map_04(g, **kw)
+        return _shard_map_04(f, **kw)

@@ -20,7 +20,7 @@ class MoEConfig:
     n_shared: int = 0             # shared (always-on) experts, deepseek-style
     capacity_factor: float = 1.25
     router_aux_weight: float = 0.01
-    impl: str = "ragged"          # "dense" | "ragged" | "ep" (expert-parallel shard_map)
+    impl: str = "ragged"     # "dense" | "ragged" | "ep" (EP shard_map)
 
 
 @dataclass(frozen=True)
@@ -57,7 +57,8 @@ class ModelConfig:
     d_ff: int
     vocab_size: int
     head_dim: int = 128
-    # layer pattern: repeated period of layer kinds ("attn" | "mamba" | "cross").
+    # layer pattern: repeated period of layer kinds
+    # ("attn" | "mamba" | "cross").
     layer_pattern: Tuple[str, ...] = ("attn",)
     # which positions in the period use MoE instead of a dense FFN
     moe_pattern: Tuple[bool, ...] = (False,)
@@ -67,7 +68,7 @@ class ModelConfig:
     qk_norm: bool = False
     rope_theta: float = 10000.0
     norm_eps: float = 1e-6
-    logit_softcap: float = 0.0    # gemma/grok style final-logit softcap (0 = off)
+    logit_softcap: float = 0.0   # gemma/grok final-logit softcap (0=off)
     scale_embeddings: bool = False  # gemma: multiply embeddings by sqrt(d)
     tie_embeddings: bool = False
     dense_first_layer: bool = False   # deepseek-moe: layer 0 uses a dense FFN
@@ -95,7 +96,7 @@ class ModelConfig:
     # XLA cost_analysis counts a while-loop body ONCE regardless of trip
     # count, so roofline flops are extrapolated from two unrolled
     # shallow-depth compiles instead.
-    scan_unroll: bool = False            # activation checkpointing on the layer scan
+    scan_unroll: bool = False    # activation ckpting on the layer scan
 
     # ---- derived helpers -------------------------------------------------
     @property
@@ -135,7 +136,7 @@ class ModelConfig:
         return self.moe_pattern[pos % self.period]
 
     def count_params(self) -> int:
-        """Analytic parameter count (matches init_params; used for roofline)."""
+        """Analytic parameter count (matches init_params; roofline)."""
         from repro.models.params import count_params
         return count_params(self)
 

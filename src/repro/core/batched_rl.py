@@ -1,0 +1,319 @@
+"""Batched multi-episode RL training (the router-training scale-up).
+
+The sequential trainer (`rl_router.train`, the paper-faithful loop)
+interleaves one Python-simulator episode with one jitted Q dispatch per
+decision and one synchronous gradient step every few decisions -- the
+DQN learner is starved and the accelerator dispatch overhead is paid
+per request.  This module runs N independent episodes in lockstep
+"rounds" instead:
+
+  * one `DQNAgent.act_batch` call selects actions for all N episodes
+    (one jitted dispatch per round instead of per decision);
+  * every transition feeds ONE shared replay buffer, so the learner
+    sees N-fold experience throughput;
+  * learn steps are dispatched asynchronously (`learn(sync=False)`)
+    once per `learn_every_rounds` rounds -- on CPU the XLA gradient
+    step runs on a worker thread while Python steps the simulators of
+    the next round, taking the learner off the critical path;
+  * episodes draw from a *scenario stream* (`workload.make_scenario`):
+    heterogeneous hardware mixes, bursty/diurnal arrivals, and varying
+    cluster widths.  States, masks, and guidance priors are padded to
+    the widest cluster `m_max` (padding encodes exactly like a failed
+    instance, and the defer action moves to the last slot), so all
+    episodes share one Q network and one buffer.
+
+A 1-episode batched run reproduces the sequential path decision for
+decision (see tests/test_batched_rl.py); at 8 parallel episodes the
+runner trains >3x faster on 2 CPU cores (benchmarks/bench_batched_rl).
+"""
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core import rl_router as rl
+from repro.core import state as state_lib
+from repro.core.workload import Scenario
+from repro.serving.request import summarize
+
+
+@dataclass
+class BatchedRLConfig:
+    n_envs: int = 8
+    # padded instance width shared by every episode; None = max of
+    # cfg.n_instances and the widest scenario seen at start time is NOT
+    # knowable, so scenarios wider than m_max raise.
+    m_max: Optional[int] = None
+    # learn cadence in rounds (a round = one decision on each of n_envs
+    # episodes).  Every 2 rounds x 256-sample batches keeps the async
+    # XLA step fully hidden behind simulator Python on a 2-core CPU and
+    # still trains to parity with the sequential loop (validated in
+    # benchmarks/bench_batched_rl.py).
+    learn_every_rounds: int = 2
+    updates_per_learn: int = 1
+    # gradient-batch size for the shared learner.  Smaller than the
+    # sequential default (512) on purpose: the async-dispatched XLA step
+    # must fit inside one round's Python simulator work to stay off the
+    # critical path (at 256 it does on a 2-core CPU; the higher update
+    # frequency compensates the smaller batch).
+    learn_batch_size: int = 256
+    sync_learn: bool = False         # True: block on each gradient step
+    valid_every: int = 4             # validate every k completed episodes
+
+
+class _Slot:
+    """One concurrent episode: env + its schedule point and bookkeeping."""
+
+    __slots__ = ("env", "ep", "scenario", "w_k", "w_sel", "eps", "window",
+                 "rew", "s", "s_pad", "mask_pad", "reward", "ticks",
+                 "done")
+
+    def __init__(self, cfg: rl.RouterConfig, scenario: Scenario, ep: int,
+                 m_max: int, predict_decode, explore: bool):
+        if scenario.m > m_max:
+            raise ValueError(
+                f"scenario {scenario.name} has m={scenario.m} > "
+                f"m_max={m_max}; raise BatchedRLConfig.m_max")
+        self.env = rl.RoutingEnv(cfg, scenario.profiles, predict_decode)
+        self.ep = ep
+        self.scenario = scenario
+        self.w_k = rl.guidance_weight(cfg, ep)
+        self.w_sel = (max(self.w_k, cfg.guidance_floor)
+                      if cfg.variant == "guided" else 0.0)
+        if explore:
+            frac = min(ep / max(cfg.explore_episodes, 1), 1.0)
+            eps = cfg.eps_start + (cfg.eps_end - cfg.eps_start) * frac
+            self.eps = 0.0 if ep >= cfg.explore_episodes else eps
+        else:
+            self.eps = 0.0
+        self.window: deque = deque()   # (s_pad, a_pad, index into rew)
+        self.rew = []                  # scaled per-decision rewards
+        self.reward = 0.0
+        self.ticks = 0
+        self.done = False
+        s = self.env.reset(scenario.requests)
+        self._set_state(s, m_max, cfg.include_impact_features)
+
+    def _set_state(self, s: np.ndarray, m_max: int, impact: bool):
+        self.s = s
+        m = self.env.m
+        self.s_pad = state_lib.pad_state(s, m, m_max, impact)
+        self.mask_pad = state_lib.pad_mask(self.env.mask(), m, m_max)
+
+    def prior_pad(self, m_max: int) -> Optional[np.ndarray]:
+        if not self.w_sel:
+            return None
+        bonus = self.env.guidance_bonus()
+        m = self.env.m
+        if m == m_max:
+            return self.w_sel * bonus
+        out = np.zeros(m_max + 1, np.float32)
+        out[:m] = bonus[:m]
+        out[m_max] = bonus[m]
+        return self.w_sel * out
+
+    def unpad_action(self, a: int, m_max: int) -> int:
+        return self.env.m if a == m_max else a
+
+
+def _act_padded(agent, cfg, slots, b_full: int, m_max: int,
+                skip=None) -> np.ndarray:
+    """One jitted Q dispatch for the live slots, batch-padded to
+    ``b_full`` rows so XLA compiles exactly one shape per run (the slot
+    pool shrinks in the drain phase; per-size retracing would pay a
+    fresh compile each time).  Padding rows are all-masked and their
+    argmax is discarded.  ``skip[i]`` rows (exploring slots) get no
+    guidance prior."""
+    b = len(slots)
+    d = slots[0].s_pad.shape[0]
+    states = np.zeros((b_full, d), np.float32)
+    masks = np.zeros((b_full, m_max + 1), bool)
+    for i, sl in enumerate(slots):
+        states[i] = sl.s_pad
+        masks[i] = sl.mask_pad
+    priors = None
+    if cfg.variant == "guided":
+        priors = np.zeros((b_full, m_max + 1), np.float64)
+        for i, sl in enumerate(slots):
+            if skip is not None and skip[i]:
+                continue
+            p = sl.prior_pad(m_max)
+            if p is not None:
+                priors[i] = p
+    acts = agent.act_batch(
+        states, masks, epsilon=None, prior=priors,
+        q_squash=cfg.q_squash if cfg.variant == "guided" else 0.0)
+    return acts[:b]
+
+
+def _flush_one(agent, slot: _Slot, gp: np.ndarray, nstep: int):
+    """Emit the oldest window entry's truncated n-step return.  Rewards
+    live in one per-episode log (`slot.rew`) indexed by decision, so a
+    decision costs one append instead of one append per window entry."""
+    s0, a0, t0 = slot.window.popleft()
+    rs = slot.rew[t0:t0 + nstep]
+    ret = float(np.asarray(rs, np.float64) @ gp[:len(rs)])
+    agent.observe(s0, a0, ret, slot.s_pad, 1.0, slot.mask_pad)
+
+
+def train_batched(cfg: rl.RouterConfig,
+                  scenario_fn: Callable[[int], Scenario],
+                  n_episodes: int,
+                  bcfg: Optional[BatchedRLConfig] = None,
+                  agent=None,
+                  predict_decode: Optional[Callable] = None,
+                  valid_fn: Optional[Callable[[], Scenario]] = None,
+                  verbose: bool = False) -> Dict:
+    """Train the RL router over ``n_episodes`` scenarios, ``bcfg.n_envs``
+    at a time; returns {agent, history} like `rl_router.train`.
+
+    ``scenario_fn(ep)`` must return a FRESH Scenario per call (the
+    simulation consumes its request objects).  ``valid_fn`` (optional)
+    returns a validation Scenario; every ``bcfg.valid_every`` completed
+    episodes the current greedy policy is scored on it and the best
+    snapshot is restored at the end, as in the sequential trainer."""
+    import dataclasses
+    import jax
+    import jax.numpy as jnp
+    bcfg = bcfg or BatchedRLConfig()
+    m_max = bcfg.m_max or cfg.n_instances
+    agent = agent or rl.make_agent(cfg, m=m_max)
+    if bcfg.learn_batch_size and \
+            agent.cfg.batch_size != bcfg.learn_batch_size:
+        agent.cfg = dataclasses.replace(agent.cfg,
+                                        batch_size=bcfg.learn_batch_size)
+    scale = 1.0 if cfg.potential_shaping else cfg.reward_scale
+    gp = cfg.nstep_gamma ** np.arange(max(cfg.nstep, 1), dtype=np.float64)
+    history: List[Dict] = []
+    best = None
+    started = 0
+    slots: List[_Slot] = []
+    while started < min(bcfg.n_envs, n_episodes):
+        slots.append(_Slot(cfg, scenario_fn(started), started, m_max,
+                           predict_decode, explore=True))
+        started += 1
+    round_i = 0
+    since_valid = 0
+    b_full = len(slots)      # the slot pool only ever shrinks
+    while slots:
+        b = len(slots)
+        # exploration draws first: exploring slots need neither Q values
+        # nor guidance priors (mirrors the sequential act() early-out),
+        # and an all-exploring round skips the jitted dispatch entirely
+        explore = agent.rng.random(b) < np.array([sl.eps for sl in slots])
+        if explore.all():
+            acts = np.array([agent.rng.choice(np.flatnonzero(sl.mask_pad))
+                             for sl in slots], np.int64)
+        else:
+            acts = _act_padded(agent, cfg, slots, b_full, m_max,
+                               skip=explore)
+            for i in np.flatnonzero(explore):
+                acts[i] = agent.rng.choice(
+                    np.flatnonzero(slots[i].mask_pad))
+        # dispatch the gradient step(s) NOW, right after the params were
+        # consumed by act_batch: with sync_learn=False the XLA update
+        # runs on a worker thread while the Python below steps the N
+        # simulators, so the learner costs almost no wall time.  (The
+        # next round's act_batch blocks until the new params are ready.)
+        round_i += 1
+        if round_i % bcfg.learn_every_rounds == 0:
+            for _ in range(bcfg.updates_per_learn):
+                agent.learn(sync=bcfg.sync_learn)
+        finished: List[_Slot] = []
+        for i, sl in enumerate(slots):
+            a_pad = int(acts[i])
+            s_prev_pad = sl.s_pad
+            s2, r, done, _ = sl.env.step(sl.unpad_action(a_pad, m_max),
+                                         guide_w=sl.w_k)
+            sl._set_state(s2, m_max, cfg.include_impact_features)
+            if cfg.nstep > 0:
+                sl.window.append((s_prev_pad, a_pad, len(sl.rew)))
+                sl.rew.append(r / scale)
+                if len(sl.window) > cfg.nstep:
+                    _flush_one(agent, sl, gp, cfg.nstep)
+            else:
+                agent.observe(s_prev_pad, a_pad, r / scale, sl.s_pad,
+                              float(done), sl.mask_pad)
+            sl.reward += r
+            sl.ticks += 1
+            if done:
+                sl.done = True
+                finished.append(sl)
+        for sl in finished:
+            while sl.window:
+                _flush_one(agent, sl, gp, cfg.nstep)
+            stats = summarize(sl.scenario.requests)
+            stats.update({"episode": sl.ep, "reward": sl.reward,
+                          "ticks": sl.ticks, "epsilon": sl.eps,
+                          "guide_w": sl.w_k,
+                          "scenario": sl.scenario.name,
+                          "pattern": sl.scenario.pattern,
+                          "m": sl.scenario.m})
+            since_valid += 1
+            if (valid_fn is not None and sl.eps <= 0.6
+                    and since_valid >= bcfg.valid_every):
+                since_valid = 0
+                v = evaluate_scenarios(cfg, agent, [valid_fn()],
+                                       predict_decode, m_max=m_max)[0]
+                stats["valid_e2e"] = v["e2e_mean"]
+                if best is None or v["e2e_mean"] < best[0]:
+                    best = (v["e2e_mean"],
+                            jax.tree.map(jnp.copy, agent.params))
+            history.append(stats)
+            if verbose:
+                print(f"ep {sl.ep:3d} [{sl.scenario.name:>20s}] "
+                      f"eps={sl.eps:.2f} reward={sl.reward:10.1f} "
+                      f"e2e={stats.get('e2e_mean', float('nan')):.2f}")
+            idx = slots.index(sl)
+            if started < n_episodes:
+                slots[idx] = _Slot(cfg, scenario_fn(started), started,
+                                   m_max, predict_decode, explore=True)
+                started += 1
+            else:
+                slots.pop(idx)
+    if best is not None:
+        agent.params = best[1]
+        agent.target = jax.tree.map(jnp.copy, best[1])
+    history.sort(key=lambda h: h["episode"])
+    return {"agent": agent, "history": history}
+
+
+def evaluate_scenarios(cfg: rl.RouterConfig, agent,
+                       scenarios: Sequence[Scenario],
+                       predict_decode: Optional[Callable] = None,
+                       m_max: Optional[int] = None) -> List[Dict]:
+    """Greedy (epsilon=0, no learning) batched evaluation; one stats dict
+    per scenario, same fields as `rl_router.evaluate`.  With a single
+    homogeneous scenario of width cfg.n_instances this reproduces the
+    sequential evaluate decision for decision."""
+    m_max = m_max or max([cfg.n_instances] + [s.m for s in scenarios])
+    slots = [_Slot(cfg, s, ep=0, m_max=m_max,
+                   predict_decode=predict_decode, explore=False)
+             for s in scenarios]
+    for sl in slots:
+        sl.w_sel = cfg.guidance_floor if cfg.variant == "guided" else 0.0
+    live = [sl for sl in slots if not sl.done]
+    b_full = max(len(live), 1)
+    while live:
+        acts = _act_padded(agent, cfg, live, b_full, m_max)
+        for i, sl in enumerate(live):
+            a = sl.unpad_action(int(acts[i]), m_max)
+            s2, _, done, _ = sl.env.step(a)
+            sl._set_state(s2, m_max, cfg.include_impact_features)
+            sl.done = done
+        live = [sl for sl in live if not sl.done]
+    out = []
+    for sl in slots:
+        stats = summarize(sl.scenario.requests)
+        stats["spikes"] = sum(len(i.spikes)
+                              for i in sl.env.cluster.instances)
+        routed = [r.routed_at - r.arrival for r in sl.scenario.requests
+                  if r.routed_at is not None]
+        stats["router_wait_mean"] = (float(np.mean(routed))
+                                     if routed else 0.0)
+        stats["scenario"] = sl.scenario.name
+        out.append(stats)
+    return out

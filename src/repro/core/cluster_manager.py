@@ -16,8 +16,7 @@ Glues the intelligent router to a cluster (simulated or real engines):
 """
 from __future__ import annotations
 
-import os
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence
 
 import numpy as np
@@ -25,7 +24,6 @@ import numpy as np
 from repro.core import rl_router, state as state_lib
 from repro.core.dqn import DQNAgent
 from repro.core.profiles import HardwareProfile
-from repro.core.simulator import Cluster
 from repro.serving.request import Request, summarize
 from repro.training.checkpoint import CheckpointManager
 
@@ -69,7 +67,7 @@ class ManagedCluster:
         self.events.append(f"t={self.env.cluster.t:.2f} ADD instance {i}")
         return i
 
-    # -- checkpoint / restart --------------------------------------------------
+    # -- checkpoint / restart ----------------------------------------------
     def save_router(self, step: int):
         if self.ckpt:
             self.ckpt.save(step, self.agent.state_dict(), sync=True)
@@ -83,7 +81,7 @@ class ManagedCluster:
         self.agent.load_state_dict(out[0])
         return True
 
-    # -- serving loop -----------------------------------------------------------
+    # -- serving loop ------------------------------------------------------
     def serve(self, requests: Sequence[Request],
               fault_plan: Optional[Dict[float, str]] = None) -> Dict:
         """Run an episode; fault_plan maps sim-time -> event string

@@ -99,12 +99,28 @@ def _huber(x, delta):
     return jnp.where(a <= delta, 0.5 * x * x, delta * (a - 0.5 * delta))
 
 
-@functools.partial(jax.jit, static_argnames=("cfg",), donate_argnums=(1, 2))
+@functools.partial(jax.jit, static_argnames=("cfg",))
 def train_batch(cfg: DQNConfig, params: Dict, opt: Dict, target: Dict,
-                batch: Dict) -> Tuple[Dict, Dict, jax.Array]:
-    """One Adam step on the double-DQN TD loss."""
-    s, a, r, s2, done, mask2 = (batch["s"], batch["a"], batch["r"],
-                                batch["s2"], batch["done"], batch["mask2"])
+                batch: Dict) -> Tuple[Dict, Dict, Dict, jax.Array]:
+    """One Adam step on the double-DQN TD loss + fused polyak target
+    update (a single dispatch; the unjitted per-leaf tree.map used to
+    dominate learn() wall time).
+
+    Deliberately NOT donating params/opt/target: donated dispatch blocks
+    until the donated input futures materialize, which serializes
+    chained learn steps and defeats the batched runner's async overlap;
+    the Q network is ~100 KB, so the copies are free by comparison.
+
+    ``batch`` is one packed [B, 2*state_dim + 3 + n_actions] float32
+    array ([s | s2 | a | r | done | mask2]) so learn() pays a single
+    host->device transfer instead of six."""
+    d = cfg.state_dim
+    s = batch[:, :d]
+    s2 = batch[:, d:2 * d]
+    a = batch[:, 2 * d].astype(jnp.int32)
+    r = batch[:, 2 * d + 1]
+    done = batch[:, 2 * d + 2]
+    mask2 = batch[:, 2 * d + 3:] > 0.5
 
     def loss_fn(p):
         q = apply_q(cfg, p, s)
@@ -131,34 +147,39 @@ def train_batch(cfg: DQNConfig, params: Dict, opt: Dict, target: Dict,
     new_p = jax.tree.map(
         lambda p, m, v: p - cfg.lr * (m / bc1) / (jnp.sqrt(v / bc2) + eps),
         params, new_m, new_v)
-    return new_p, {"m": new_m, "v": new_v, "step": step}, loss
+    new_target = jax.tree.map(
+        lambda t, p: (1.0 - cfg.tau) * t + cfg.tau * p, target, new_p)
+    return new_p, {"m": new_m, "v": new_v, "step": step}, new_target, loss
 
 
 class ReplayBuffer:
+    """Ring buffer with PACKED rows [s | s2 | a | r | done | mask2]: one
+    contiguous float32 matrix, so sampling is a single gather and the
+    learner a single host->device transfer."""
+
     def __init__(self, cfg: DQNConfig):
         n, d, a = cfg.buffer_size, cfg.state_dim, cfg.n_actions
-        self.s = np.zeros((n, d), np.float32)
-        self.a = np.zeros((n,), np.int32)
-        self.r = np.zeros((n,), np.float32)
-        self.s2 = np.zeros((n, d), np.float32)
-        self.done = np.zeros((n,), np.float32)
-        self.mask2 = np.zeros((n, a), bool)
+        self.d = d
+        self.data = np.zeros((n, 2 * d + 3 + a), np.float32)
         self.size = 0
         self.ptr = 0
         self.cap = n
 
     def add(self, s, a, r, s2, done, mask2):
-        i = self.ptr
-        self.s[i], self.a[i], self.r[i] = s, a, r
-        self.s2[i], self.done[i], self.mask2[i] = s2, done, mask2
-        self.ptr = (i + 1) % self.cap
+        row = self.data[self.ptr]
+        d = self.d
+        row[:d] = s
+        row[d:2 * d] = s2
+        row[2 * d] = a
+        row[2 * d + 1] = r
+        row[2 * d + 2] = done
+        row[2 * d + 3:] = mask2
+        self.ptr = (self.ptr + 1) % self.cap
         self.size = min(self.size + 1, self.cap)
 
-    def sample(self, rng: np.random.Generator, batch: int) -> Dict:
+    def sample(self, rng: np.random.Generator, batch: int) -> np.ndarray:
         idx = rng.integers(0, self.size, size=batch)
-        return {"s": self.s[idx], "a": self.a[idx], "r": self.r[idx],
-                "s2": self.s2[idx], "done": self.done[idx],
-                "mask2": self.mask2[idx]}
+        return self.data[idx]
 
 
 class DQNAgent:
@@ -187,15 +208,36 @@ class DQNAgent:
         valid = np.flatnonzero(mask)
         if epsilon > 0 and self.rng.random() < epsilon:
             return int(self.rng.choice(valid))
-        q = np.array(q_values(self.cfg, self.params,
-                              jnp.asarray(state[None])))[0]
+        a = self.act_batch(state[None], mask[None],
+                           prior=None if prior is None else prior[None],
+                           q_squash=q_squash)
+        return int(a[0])
+
+    def act_batch(self, states: np.ndarray, masks: np.ndarray,
+                  epsilon: Optional[np.ndarray] = None,
+                  prior: Optional[np.ndarray] = None,
+                  q_squash: float = 0.0) -> np.ndarray:
+        """Vectorized ``act`` over a batch of independent episode states
+        ([B, state_dim] -> [B] actions): ONE jitted Q dispatch for the
+        whole batch instead of one per episode -- the core amortization of
+        the batched multi-episode runner.  ``epsilon`` is per-episode (the
+        batched runner mixes episodes at different schedule points)."""
+        q = np.asarray(q_values(self.cfg, self.params,
+                                jnp.asarray(states)), dtype=np.float64)
         if q_squash > 0:
-            ref = np.max(q[mask]) if mask.any() else 0.0
-            q = q_squash * np.tanh(q - ref)
+            qm = np.where(masks, q, -np.inf)
+            ref = np.max(qm, axis=1)
+            ref = np.where(np.isfinite(ref), ref, 0.0)
+            q = q_squash * np.tanh(q - ref[:, None])
         if prior is not None:
             q = q + prior
-        q[~mask] = -np.inf
-        return int(np.argmax(q))
+        q[~masks] = -np.inf
+        acts = np.argmax(q, axis=1).astype(np.int64)
+        if epsilon is not None and np.any(epsilon > 0):
+            explore = self.rng.random(len(acts)) < epsilon
+            for i in np.flatnonzero(explore):
+                acts[i] = int(self.rng.choice(np.flatnonzero(masks[i])))
+        return acts
 
     def observe(self, s, a, r, s2, done, mask2):
         if self.cfg.center_rewards:
@@ -206,19 +248,21 @@ class DQNAgent:
             r = r - self.r_mean
         self.buffer.add(s, a, r, s2, done, mask2)
 
-    def learn(self) -> Optional[float]:
+    def learn(self, sync: bool = True) -> Optional[float]:
+        """One gradient step.  ``sync=False`` skips the loss read-back so
+        the jitted update is dispatched asynchronously: on CPU the XLA
+        gradient computation then runs on a worker thread, overlapping
+        the caller's Python (the batched runner steps its simulators
+        while the learner crunches; the next q_values call blocks until
+        the new params are ready)."""
         if self.buffer.size < self.cfg.batch_size:
             return None
-        batch = {k: jnp.asarray(v) for k, v in
-                 self.buffer.sample(self.rng, self.cfg.batch_size).items()}
-        self.params, self.opt, loss = train_batch(
+        batch = jnp.asarray(self.buffer.sample(self.rng,
+                                               self.cfg.batch_size))
+        self.params, self.opt, self.target, loss = train_batch(
             self.cfg, self.params, self.opt, self.target, batch)
         self.steps += 1
-        tau = self.cfg.tau
-        self.target = jax.tree.map(
-            lambda t, p: (1.0 - tau) * t + tau * p, self.target,
-            self.params)
-        return float(loss)
+        return float(loss) if sync else None
 
     # checkpointable state (router fault tolerance)
     def state_dict(self):

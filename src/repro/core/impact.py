@@ -61,6 +61,16 @@ def mixing_per_instance(profile: HardwareProfile, p_i: int, d_i: int,
                      for s in resident_token_sums])
 
 
+def mixing_heterogeneous(profiles: Sequence[HardwareProfile], p_i: int,
+                         d_i: int, resident_token_sums: Sequence[float],
+                         alpha: float = 0.5) -> np.ndarray:
+    """r_mixing per instance with per-instance hardware profiles (mixed
+    GPU generations behind one router): each instance's impact is judged
+    against its own grad1/grad2 calibration."""
+    return np.array([r_mixing(prof, p_i, d_i, s, alpha)
+                     for prof, s in zip(profiles, resident_token_sums)])
+
+
 def guidance_h(profile: HardwareProfile, p_i: int, d_i: int,
                resident_token_sums: Sequence[float], chosen: int,
                alpha: float = 0.5) -> float:

@@ -20,8 +20,8 @@ evidently intended penalty  + w_k * h.
 from __future__ import annotations
 
 from collections import deque
-from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional, Sequence
+from dataclasses import dataclass
+from typing import Callable, Dict, Optional, Sequence
 
 import numpy as np
 
@@ -93,12 +93,21 @@ class RouterConfig:
 
 
 class RoutingEnv:
-    """One router action per dt tick (the paper's 0.02 s cadence)."""
+    """One router action per dt tick (the paper's 0.02 s cadence).
 
-    def __init__(self, cfg: RouterConfig, profile: HardwareProfile,
+    ``profile`` may be one HardwareProfile (homogeneous, cfg.n_instances
+    wide -- the paper's setup) or a sequence of per-instance profiles
+    (heterogeneous cluster; its length overrides cfg.n_instances)."""
+
+    def __init__(self, cfg: RouterConfig, profile,
                  predict_decode: Optional[Callable] = None):
         self.cfg = cfg
-        self.profile = profile
+        if isinstance(profile, HardwareProfile):
+            self.profiles = (profile,) * cfg.n_instances
+        else:
+            self.profiles = tuple(profile)
+        self.profile = self.profiles[0]     # router-level reference
+        self.m = len(self.profiles)
         # d-hat: estimated decode tokens for a request (predictor hook;
         # oracle fallback)
         self.predict_decode = predict_decode or (
@@ -106,11 +115,24 @@ class RoutingEnv:
 
     def reset(self, requests: Sequence[Request]):
         c = self.cfg
-        self.cluster = Cluster(self.profile, c.n_instances, c.scheduler,
+        self.cluster = Cluster(self.profiles, self.m, c.scheduler,
                                c.dt, c.chunked_prefill, c.n_slots)
         self.pending = sorted(requests, key=lambda r: r.arrival)
         self.n_total = len(self.pending)
-        self._arrived: List[Request] = []
+        # Incremental backlog penalty (Eq. 3 term 1).  The penalty is
+        #   -sum_unfinished (1 - frac_r) / t_hat_r
+        # with d-hat/t-hat fixed per request; instead of rescanning every
+        # arrived request every 0.02 s tick (which dominated episode wall
+        # time), we maintain S = sum 1/t_hat and T = sum frac/t_hat via
+        # arrival/decode/preempt/finish events and read pen = T - S in
+        # O(1).  Decode/preempt events come from SimInstance hooks.
+        self._S = 0.0
+        self._T = 0.0
+        self._inv: Dict[int, tuple] = {}     # rid -> (1/d_hat, 1/t_hat)
+        self._score_cache = None
+        for inst in self.cluster.instances:
+            inst.on_token = self._on_token
+            inst.on_preempt = self._on_preempt
         self._i = 0
         self._deliver()
         return self._state()
@@ -120,8 +142,34 @@ class RoutingEnv:
                and self.pending[self._i].arrival <= self.cluster.t):
             r = self.pending[self._i]
             self.cluster.enqueue(r)
-            self._arrived.append(r)
+            d_hat = max(self.predict_decode(r), 1)
+            inv_t = 1.0 / max(
+                self.profile.request_time(r.prompt_tokens, d_hat), 1e-3)
+            self._inv[r.rid] = (1.0 / d_hat, inv_t)
+            self._S += inv_t
             self._i += 1
+
+    def _on_token(self, r):
+        iv = self._inv.get(r.rid)
+        if iv is None:
+            return
+        f0 = (r.decoded - 1) * iv[0]
+        if f0 >= 1.0:                 # progress already capped at 1
+            return
+        self._T += (min(r.decoded * iv[0], 1.0) - f0) * iv[1]
+
+    def _on_preempt(self, r):
+        # called BEFORE reset_progress: r still holds its progress
+        iv = self._inv.get(r.rid)
+        if iv is not None and r.decoded:
+            self._T -= min(r.decoded * iv[0], 1.0) * iv[1]
+
+    def _note_finished(self, done_now):
+        for r in done_now:
+            iv = self._inv.pop(r.rid, None)
+            if iv is not None:
+                self._S -= iv[1]
+                self._T -= min(r.decoded * iv[0], 1.0) * iv[1]
 
     def _state(self) -> np.ndarray:
         return state_lib.featurize(
@@ -132,6 +180,28 @@ class RoutingEnv:
     def mask(self) -> np.ndarray:
         return state_lib.action_mask(self.cluster)
 
+    def _scores(self, req) -> np.ndarray:
+        """Per-instance r_mixing for routing ``req`` now (each instance
+        judged by its own profile; failed instances -inf).  Cached per
+        (request, tick): act-time guidance and the step() reward both need
+        the same scores and the cluster cannot change in between."""
+        cluster = self.cluster
+        key = (req.rid, cluster.t)
+        if self._score_cache is not None and self._score_cache[0] == key:
+            return self._score_cache[1]
+        d_hat = max(self.predict_decode(req), 1)
+        # queued requests carry zero progress, so queue context == prompts
+        sums = [inst.resident_token_sum() + inst.queued_prompt_sum()
+                for inst in cluster.instances]
+        scores = impact.mixing_heterogeneous(
+            [inst.profile for inst in cluster.instances],
+            req.prompt_tokens, d_hat, sums, self.cfg.alpha)
+        for i, inst in enumerate(cluster.instances):
+            if inst.failed:
+                scores[i] = -np.inf
+        self._score_cache = (key, scores)
+        return scores
+
     def guidance_bonus(self) -> np.ndarray:
         """Per-action r_mixing advantage for the current head request
         (route_i: scores_i - max; defer: min - max), zeros if no request."""
@@ -141,14 +211,7 @@ class RoutingEnv:
             return out
         req = cluster.central[0]
         d_hat = max(self.predict_decode(req), 1)
-        sums = [inst.resident_token_sum()
-                + sum(r.prompt_tokens + r.decoded for r in inst.queue)
-                for inst in cluster.instances]
-        scores = impact.mixing_per_instance(
-            self.profile, req.prompt_tokens, d_hat, sums, self.cfg.alpha)
-        for i, inst in enumerate(cluster.instances):
-            if inst.failed:
-                scores[i] = -np.inf
+        scores = self._scores(req)
         # capacity-fit term (§5.3 reward design goal (c): prevent requests
         # from queueing at instances for lack of memory): placements that
         # would overflow the KV budget are penalized; if nothing fits,
@@ -167,15 +230,7 @@ class RoutingEnv:
         return out
 
     def _backlog_penalty(self) -> float:
-        pen = 0.0
-        for r in self._arrived:
-            if r.finished is not None:
-                continue
-            d_hat = max(self.predict_decode(r), 1)
-            t_hat = self.profile.request_time(r.prompt_tokens, d_hat)
-            f = min(r.decoded / d_hat, 1.0)
-            pen -= (1.0 - f) / max(t_hat, 1e-3)
-        return pen
+        return self._T - self._S
 
     def step(self, action: int, guide_w: float = 0.0):
         """One DECISION: apply the action, then advance dt ticks until the
@@ -189,16 +244,7 @@ class RoutingEnv:
         mix_term = 0.0
         scores = None
         if cluster.central:
-            req = cluster.central[0]
-            d_hat = max(self.predict_decode(req), 1)
-            sums = [inst.resident_token_sum()
-                    + sum(r.prompt_tokens + r.decoded for r in inst.queue)
-                    for inst in cluster.instances]
-            scores = impact.mixing_per_instance(
-                self.profile, req.prompt_tokens, d_hat, sums, c.alpha)
-            for i, inst in enumerate(cluster.instances):
-                if inst.failed:
-                    scores[i] = -np.inf
+            scores = self._scores(cluster.central[0])
         if (action >= cluster.m and scores is not None
                 and cluster.t - cluster.central[0].arrival
                 > c.defer_timeout):
@@ -224,6 +270,7 @@ class RoutingEnv:
         phi_before = self._backlog_penalty()
         while True:
             done_now = cluster.advance()
+            self._note_finished(done_now)
             self._deliver()
             completed += len(done_now)
             if not c.potential_shaping:
@@ -246,13 +293,15 @@ class RoutingEnv:
         return self._state(), reward, done, {"completed": completed}
 
 
-def make_agent(cfg: RouterConfig) -> DQNAgent:
+def make_agent(cfg: RouterConfig, m: Optional[int] = None) -> DQNAgent:
+    """Build the DQN agent for an m-instance action space (defaults to
+    cfg.n_instances; the batched runner passes its padded width m_max)."""
+    m = m or cfg.n_instances
     inst_dims = state_lib.INSTANCE_DIMS + (
         1 if cfg.include_impact_features else 0)
     dcfg = DQNConfig(
-        state_dim=state_lib.state_dim(cfg.n_instances,
-                                      cfg.include_impact_features),
-        n_actions=cfg.n_instances + 1, hidden=cfg.hidden,
+        state_dim=state_lib.state_dim(m, cfg.include_impact_features),
+        n_actions=m + 1, hidden=cfg.hidden,
         gamma=cfg.gamma, lr=cfg.lr, q_arch=cfg.q_arch,
         inst_dims=inst_dims, router_dims=state_lib.ROUTER_DIMS,
         center_rewards=not cfg.potential_shaping)
@@ -276,7 +325,6 @@ def train(cfg: RouterConfig, profile: HardwareProfile,
     valid_fn: workload for periodic GREEDY validation; the best-validating
     snapshot is restored at the end (protects against the well-known
     late-training DQN collapse when epsilon hits zero)."""
-    import copy as _copy
     import jax
     import jax.numpy as jnp
     agent = agent or make_agent(cfg)
@@ -293,8 +341,12 @@ def train(cfg: RouterConfig, profile: HardwareProfile,
         eps = cfg.eps_start + (cfg.eps_end - cfg.eps_start) * frac
         if ep >= cfg.explore_episodes:
             eps = 0.0               # §A.9.2: exploit after episode 20
-        # per-episode discount (heuristic-guided horizon shortening)
-        if agent.cfg.gamma != gamma_k:
+        # per-episode discount (heuristic-guided horizon shortening).
+        # With n-step Monte-Carlo targets (nstep>0, observe() passes
+        # done=1) gamma never enters the TD target, and mutating the
+        # static cfg forces an XLA recompile per distinct value -- so the
+        # retrace is only applied in bootstrapped (nstep=0) mode.
+        if cfg.nstep == 0 and agent.cfg.gamma != gamma_k:
             import dataclasses as _dc
             agent.cfg = _dc.replace(agent.cfg, gamma=round(gamma_k, 3))
         w_sel = max(w_k, cfg.guidance_floor) \

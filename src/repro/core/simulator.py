@@ -38,10 +38,26 @@ class SimInstance:
         self.failed = False
         self.spikes: List[float] = []           # iteration times > 2x base
         self._admit_seq = 0
+        # observer hooks (the RL env maintains its backlog penalty
+        # incrementally from these instead of rescanning every request
+        # every tick): on_token(r) after each decoded token, on_preempt(r)
+        # BEFORE a preemption resets r's progress.
+        self.on_token = None
+        self.on_preempt = None
+        # incrementally-maintained token sums (every mutation site in
+        # this class updates them; recomputing per query dominated the
+        # simulator's profile).  Queue invariant: queued requests always
+        # have zero progress (preemption resets before requeue), so the
+        # queue's context sum equals its prompt sum.
+        self._rts = 0.0                # sum of total_context, residents
+        self._qps = 0.0                # sum of prompt_tokens, queue
 
     # -- router-visible state ------------------------------------------------
     def resident_token_sum(self) -> float:
-        return float(sum(r.total_context for r in self.residents))
+        return self._rts
+
+    def queued_prompt_sum(self) -> float:
+        return self._qps
 
     def outstanding_tokens(self) -> float:
         """Total tokens yet to be processed (for JSQ)."""
@@ -54,9 +70,7 @@ class SimInstance:
         return todo
 
     def free_tokens(self) -> float:
-        used = self.resident_token_sum() + sum(
-            r.prompt_tokens for r in self.queue)
-        return self.profile.capacity_tokens - used
+        return self.profile.capacity_tokens - self._rts - self._qps
 
     def earliest_completion(self) -> float:
         """(iterations left) x (average batch time) for the closest
@@ -85,6 +99,7 @@ class SimInstance:
         req.instance = self.instance_id
         req.routed_at = self.clock
         self.queue.append(req)
+        self._qps += req.prompt_tokens
 
     # -- iterate until the cluster time --------------------------------------
     def run_until(self, t: float) -> List[Request]:
@@ -102,17 +117,22 @@ class SimInstance:
     def _iteration(self) -> List[Request]:
         profile = self.profile
         prefill_tokens = 0
+        # resident context tokens before this iteration's prefill/decode
+        rts = self._rts
         # admission: one request per iteration if a slot is free
         if len(self.residents) < self.n_slots and self.queue:
-            budget = profile.capacity_tokens - self.resident_token_sum()
+            budget = profile.capacity_tokens - rts
             pick = self.scheduler.pick(list(self.queue), budget, profile)
             if pick is not None:
                 req = self.queue[pick]
                 del self.queue[pick]
+                self._qps -= req.prompt_tokens
                 req.phase = Phase.PREFILL
                 req.admitted_idx = self._admit_seq
                 self._admit_seq += 1
                 self.residents.append(req)
+                self._rts += req.prefilled + req.decoded
+                rts = self._rts
         # prefill progress (full, or one chunk per iteration)
         for r in self.residents:
             if r.phase is Phase.PREFILL:
@@ -127,35 +147,46 @@ class SimInstance:
                     break     # unchunked: only one prefill per iteration
         # decode every resident already in decode phase
         decoding = [r for r in self.residents if r.phase is Phase.DECODE]
-        # iteration time (spikes when prefill mixes in -- Fig. 1a)
-        resident_other = max(self.resident_token_sum() - prefill_tokens, 0)
-        it_time = profile.iteration_time(prefill_tokens, resident_other)
+        # iteration time (spikes when prefill mixes in -- Fig. 1a);
+        # resident-other is the pre-prefill context sum
+        it_time = profile.iteration_time(prefill_tokens, rts)
         if it_time > 2.0 * profile.t_decode_base:
             self.spikes.append(it_time)
         self.clock += it_time
+        rts += prefill_tokens
         done: List[Request] = []
+        on_token = self.on_token
         for r in decoding:
             r.decoded += 1
+            rts += 1
             if r.first_token is None:
                 r.first_token = self.clock
             r.token_times.append(self.clock)
+            if on_token is not None:
+                on_token(r)
             if r.decoded >= r.decode_tokens:
                 r.phase = Phase.DONE
                 r.finished = self.clock
                 self.completed.append(r)
                 done.append(r)
-        self.residents = [r for r in self.residents
-                          if r.phase is not Phase.DONE]
+                rts -= r.prefilled + r.decoded
+        if done:
+            self.residents = [r for r in self.residents
+                              if r.phase is not Phase.DONE]
         # capacity enforcement: evict newest-admitted until within budget.
         # The OLDEST resident is never evicted (liveness: it runs to
         # completion even if it alone overshoots -- swap-space grace),
         # matching vLLM's recompute-preemption order.
-        while (self.resident_token_sum() > profile.capacity_tokens
-               and len(self.residents) > 1):
+        while rts > profile.capacity_tokens and len(self.residents) > 1:
             victim = max(self.residents, key=lambda r: r.admitted_idx)
             self.residents.remove(victim)
+            rts -= victim.prefilled + victim.decoded
+            if self.on_preempt is not None:
+                self.on_preempt(victim)
             victim.reset_progress()
             self.queue.appendleft(victim)
+            self._qps += victim.prompt_tokens
+        self._rts = rts
         return done
 
     # -- fault injection ------------------------------------------------------
@@ -163,7 +194,11 @@ class SimInstance:
         self.failed = True
         orphans = list(self.residents) + list(self.queue)
         self.residents, self.queue = [], deque()
+        self._rts = 0.0
+        self._qps = 0.0
         for r in orphans:
+            if self.on_preempt is not None:
+                self.on_preempt(r)
             r.reset_progress()
             r.phase = Phase.QUEUED
             r.instance = None
@@ -175,16 +210,30 @@ class SimInstance:
 
 class Cluster:
     """m instances + the central router queue, stepped at dt (= the paper's
-    0.02 s action interval)."""
+    0.02 s action interval).
 
-    def __init__(self, profile: HardwareProfile, n_instances: int,
+    ``profile`` may be a single HardwareProfile (homogeneous cluster, the
+    paper's setup) or a sequence of per-instance profiles (heterogeneous
+    cluster -- mixed GPU generations behind one router); in the latter
+    case ``n_instances`` must match and ``cluster.profile`` is the first
+    entry (the router-level reference profile)."""
+
+    def __init__(self, profile, n_instances: int,
                  scheduler: str = "fcfs", dt: float = 0.02,
                  chunked_prefill: int = 0,
                  n_slots: Optional[int] = None):
-        self.profile = profile
+        if isinstance(profile, HardwareProfile):
+            profiles = [profile] * n_instances
+        else:
+            profiles = list(profile)
+            if len(profiles) != n_instances:
+                raise ValueError(
+                    f"{len(profiles)} profiles for {n_instances} instances")
+        self.profile = profiles[0]
+        self.profiles = tuple(profiles)
         self.dt = dt
         self.instances = [
-            SimInstance(profile, get_scheduler(scheduler), i,
+            SimInstance(profiles[i], get_scheduler(scheduler), i,
                         chunked_prefill, n_slots)
             for i in range(n_instances)]
         self.central: deque = deque()
@@ -220,12 +269,19 @@ class Cluster:
         return done
 
     def add_instance(self, scheduler: str = "fcfs",
-                     chunked_prefill: int = 0) -> int:
-        """Elastic scale-out."""
-        inst = SimInstance(self.profile, get_scheduler(scheduler),
+                     chunked_prefill: int = 0,
+                     profile: Optional[HardwareProfile] = None) -> int:
+        """Elastic scale-out (optionally with a different hardware tier)."""
+        inst = SimInstance(profile or self.profile, get_scheduler(scheduler),
                            len(self.instances), chunked_prefill)
         inst.clock = self.t
+        # inherit cluster-level observer hooks (the RL env's incremental
+        # backlog accounting must see the new instance's decode events)
+        if self.instances:
+            inst.on_token = self.instances[0].on_token
+            inst.on_preempt = self.instances[0].on_preempt
         self.instances.append(inst)
+        self.profiles = self.profiles + (inst.profile,)
         return inst.instance_id
 
     def fail_instance(self, idx: int):

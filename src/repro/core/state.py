@@ -10,6 +10,12 @@ Router (4 dims):
   next request prompt tokens (normalized),
   next request predicted decode bucket,
   head-of-queue waiting time (clipped).
+
+Heterogeneous clusters: every per-instance feature is computed against
+that instance's own ``HardwareProfile`` (capacity fraction, earliest
+completion, impact score), so mixed-hardware episodes featurize
+correctly; the ``profile`` argument is the router-level reference used
+only for the head request's decode bucket.
 """
 from __future__ import annotations
 
@@ -17,6 +23,7 @@ from typing import Callable, Optional
 
 import numpy as np
 
+from repro.core import impact
 from repro.core.profiles import HardwareProfile
 from repro.core.simulator import Cluster
 
@@ -25,16 +32,11 @@ N_BUCKETS = len(BUCKET_EDGES) + 1
 INSTANCE_DIMS = 2 * N_BUCKETS + 2
 ROUTER_DIMS = 4
 
+_E0, _E1 = BUCKET_EDGES
+
 
 def state_dim(m: int, include_impact: bool = True) -> int:
     return (INSTANCE_DIMS + (1 if include_impact else 0)) * m + ROUTER_DIMS
-
-
-def _hist(tokens, scale: float) -> np.ndarray:
-    h = np.zeros(N_BUCKETS, np.float32)
-    for t in tokens:
-        h[int(np.searchsorted(BUCKET_EDGES, t, side="right"))] += 1
-    return h / scale
 
 
 def featurize(cluster: Cluster, profile: HardwareProfile,
@@ -42,36 +44,66 @@ def featurize(cluster: Cluster, profile: HardwareProfile,
               n_buckets: int = 8, include_impact: bool = True,
               predict_decode: Optional[Callable] = None,
               alpha: float = 0.5) -> np.ndarray:
-    feats = []
+    # Featurization runs once per router decision; it is written as a
+    # single pass of scalar Python per instance because numpy call
+    # overhead dominates at these sizes (a handful of residents).
     head = cluster.central[0] if cluster.central else None
-    for inst in cluster.instances:
-        dims = INSTANCE_DIMS + (1 if include_impact else 0)
+    dims = INSTANCE_DIMS + (1 if include_impact else 0)
+    feats = [0.0] * (dims * cluster.m + ROUTER_DIMS)
+    if include_impact and head is not None:
+        d_hat = (predict_decode(head) if predict_decode
+                 else head.decode_tokens)
+    for k, inst in enumerate(cluster.instances):
         if inst.failed:
-            feats.extend([0.0] * dims)
-            continue
-        s = inst.load_summary()
-        scale = float(inst.n_slots)
-        feats.extend(_hist(s["p_tokens"], scale))
-        feats.extend(_hist(s["d_tokens"], scale))
-        feats.append(np.clip(s["free_tokens"]
-                             / profile.capacity_tokens, -1.0, 1.0))
-        feats.append(np.clip(s["earliest_completion"] / 10.0, 0.0, 1.0))
-        if include_impact:
+            continue         # failed instance: all-zero block
+        prof = inst.profile
+        base = k * dims
+        scale = inst.n_slots
+        p0 = p1 = p2 = d0 = d1 = d2 = 0
+        ctx = 0
+        min_left = None
+        for r in inst.residents:
+            p = r.prompt_tokens
+            if p < _E0:
+                p0 += 1
+            elif p < _E1:
+                p1 += 1
+            else:
+                p2 += 1
+            d = r.decoded
+            if d < _E0:
+                d0 += 1
+            elif d < _E1:
+                d1 += 1
+            else:
+                d2 += 1
+            ctx += r.prefilled + d
+            left = r.decode_tokens - d
+            if min_left is None or left < min_left:
+                min_left = left
+        # queued requests carry zero progress: queue context == prompts
+        q_prompt = q_ctx = inst.queued_prompt_sum()
+        feats[base] = p0 / scale
+        feats[base + 1] = p1 / scale
+        feats[base + 2] = p2 / scale
+        feats[base + 3] = d0 / scale
+        feats[base + 4] = d1 / scale
+        feats[base + 5] = d2 / scale
+        free = (prof.capacity_tokens - ctx - q_prompt) / prof.capacity_tokens
+        feats[base + 6] = -1.0 if free < -1.0 else (1.0 if free > 1.0
+                                                    else free)
+        t_c = (max(min_left, 0) * prof.t_decode_base / 10.0
+               if min_left is not None else 0.0)
+        feats[base + 7] = 1.0 if t_c > 1.0 else t_c
+        if include_impact and head is not None:
             # the workload impact estimator is a router module (§5.2); its
             # per-instance score for the head request is part of the
             # router's observable state.
-            if head is not None:
-                from repro.core import impact
-                d_hat = (predict_decode(head) if predict_decode
-                         else head.decode_tokens)
-                resident = s["resident_tokens"] + sum(
-                    r.prompt_tokens + r.decoded for r in inst.queue)
-                score = impact.r_mixing(profile, head.prompt_tokens,
-                                        d_hat, resident, alpha)
-                feats.append(float(np.clip(score, -5.0, 1.0)))
-            else:
-                feats.append(0.0)
-    qlen = min(len(cluster.central), 512) / 512.0
+            score = impact.r_mixing(prof, head.prompt_tokens, d_hat,
+                                    ctx + q_ctx, alpha)
+            feats[base + 8] = -5.0 if score < -5.0 else (
+                1.0 if score > 1.0 else score)
+    feats[dims * cluster.m] = min(len(cluster.central), 512) / 512.0
     if head is not None:
         if head.predicted_bucket is not None:
             bucket = head.predicted_bucket
@@ -79,13 +111,26 @@ def featurize(cluster: Cluster, profile: HardwareProfile,
             bucket = predict_bucket(head)
         else:
             bucket = profile.bucketize(head.decode_tokens, n_buckets)
-        p_norm = min(head.prompt_tokens, 2048) / 2048.0
-        b_norm = bucket / max(n_buckets - 1, 1)
-        wait = np.clip((cluster.t - head.arrival) / 10.0, 0.0, 1.0)
-    else:
-        p_norm = b_norm = wait = 0.0
-    feats.extend([qlen, p_norm, b_norm, wait])
+        feats[dims * cluster.m + 1] = min(head.prompt_tokens, 2048) / 2048.0
+        feats[dims * cluster.m + 2] = bucket / max(n_buckets - 1, 1)
+        wait = (cluster.t - head.arrival) / 10.0
+        feats[dims * cluster.m + 3] = 1.0 if wait > 1.0 else (
+            0.0 if wait < 0.0 else wait)
     return np.asarray(feats, np.float32)
+
+
+def pad_state(s: np.ndarray, m: int, m_max: int,
+              include_impact: bool = True) -> np.ndarray:
+    """Pad an m-instance state vector to m_max instance slots (zeros --
+    the same encoding as a failed instance) so episodes with different
+    cluster shapes share one replay buffer / Q network."""
+    if m == m_max:
+        return s
+    dims = INSTANCE_DIMS + (1 if include_impact else 0)
+    out = np.zeros(dims * m_max + ROUTER_DIMS, np.float32)
+    out[:dims * m] = s[:dims * m]
+    out[dims * m_max:] = s[dims * m:]
+    return out
 
 
 def action_mask(cluster: Cluster) -> np.ndarray:
@@ -98,3 +143,14 @@ def action_mask(cluster: Cluster) -> np.ndarray:
     if not cluster.central:          # nothing to route: only defer is valid
         mask[:m] = False
     return mask
+
+
+def pad_mask(mask: np.ndarray, m: int, m_max: int) -> np.ndarray:
+    """Pad an [m+1] action mask to [m_max+1]: padded instance slots are
+    invalid; defer moves to the last position."""
+    if m == m_max:
+        return mask
+    out = np.zeros(m_max + 1, bool)
+    out[:m] = mask[:m]
+    out[m_max] = mask[m]
+    return out

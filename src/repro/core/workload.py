@@ -18,11 +18,13 @@ the task hint materially improves bucket prediction (§5.1).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
-from typing import List, Optional, Sequence, Tuple
+from dataclasses import dataclass, field
+from typing import Callable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.core.profiles import (A100_LLAMA31_8B, V100_LLAMA2_7B,
+                                 HardwareProfile)
 from repro.serving.request import Request
 
 MAX_PROMPT = 1000
@@ -139,6 +141,138 @@ _TRACE_SPEC = {
     "search":       ((8.40, 0.45), (3.00, 0.55), 0.30),
     "autocomplete": ((7.80, 0.50), (2.20, 0.50), 0.15),
 }
+
+
+def arrival_times(n: int, rate: float, pattern: str = "poisson",
+                  seed: int = 0, burst_factor: float = 6.0,
+                  burst_persistence: float = 0.96,
+                  period: float = 240.0, depth: float = 0.8) -> np.ndarray:
+    """Arrival timestamps for ``n`` requests at mean rate ``rate`` req/s.
+
+    poisson -- homogeneous Poisson (the paper's setup).
+    bursty  -- two-state Markov-modulated Poisson: an ON state at
+               ``burst_factor`` x base intensity and a quiet OFF state,
+               state re-drawn per arrival with ``burst_persistence``
+               (traffic spikes like Fig. 5's incident windows).
+    diurnal -- inhomogeneous Poisson with sinusoidal intensity
+               rate(t) = rate * (1 + depth * sin(2 pi t / period)),
+               sampled by thinning (day/night load swing, compressed to
+               an episode-sized ``period``).
+    """
+    rng = np.random.default_rng(seed + 23)
+    if pattern == "poisson":
+        return np.cumsum(rng.exponential(1.0 / rate, size=n))
+    if pattern == "bursty":
+        # ~half the arrivals occur in ON bursts at burst_factor x the
+        # nominal intensity; the OFF intensity is solved so the realized
+        # long-run rate (the HARMONIC mean over per-arrival states) is
+        # ~rate:  0.5*(1/r_on + 1/r_off) = 1/rate.
+        r_on = burst_factor * rate
+        r_off = burst_factor * rate / (2.0 * burst_factor - 1.0)
+        out = np.empty(n)
+        t, on = 0.0, bool(rng.random() < 0.5)
+        for i in range(n):
+            t += rng.exponential(1.0 / (r_on if on else r_off))
+            out[i] = t
+            if rng.random() > burst_persistence:
+                on = not on
+        return out
+    if pattern == "diurnal":
+        r_max = rate * (1.0 + depth)
+        out = np.empty(n)
+        t, i = 0.0, 0
+        while i < n:
+            t += rng.exponential(1.0 / r_max)
+            r_t = rate * (1.0 + depth * np.sin(2 * np.pi * t / period))
+            if rng.random() * r_max < r_t:
+                out[i] = t
+                i += 1
+        return out
+    raise ValueError(f"unknown arrival pattern: {pattern}")
+
+
+# -- heterogeneous multi-episode scenarios (batched RL training) -------------
+
+ARRIVAL_PATTERNS = ("poisson", "bursty", "diurnal")
+PROFILE_POOL = (V100_LLAMA2_7B, A100_LLAMA31_8B)
+
+
+@dataclass
+class Scenario:
+    """One training episode: a request stream plus the cluster shape it
+    runs on (per-instance hardware profiles -- mixed generations allowed)."""
+    requests: List[Request]
+    profiles: Tuple[HardwareProfile, ...]
+    name: str = "scenario"
+    pattern: str = "poisson"
+    rate: float = 0.0
+    seed: int = 0
+    meta: dict = field(default_factory=dict)
+
+    @property
+    def m(self) -> int:
+        return len(self.profiles)
+
+    @classmethod
+    def homogeneous(cls, profile: HardwareProfile, m: int,
+                    requests: Sequence[Request], **kw) -> "Scenario":
+        return cls(requests=list(requests), profiles=(profile,) * m, **kw)
+
+
+def make_scenario(seed: int,
+                  profile_pool: Sequence[HardwareProfile] = PROFILE_POOL,
+                  n_requests: int = 200,
+                  m_range: Tuple[int, int] = (2, 6),
+                  rate_per_speed: Tuple[float, float] = (3.5, 6.5),
+                  patterns: Sequence[str] = ARRIVAL_PATTERNS,
+                  hetero_prob: float = 0.5) -> Scenario:
+    """Sample one heterogeneous-cluster episode.
+
+    Cluster width, hardware mix, arrival pattern, task mix, and load are
+    all drawn from ``seed`` (deterministic).  The arrival rate scales
+    with the sampled cluster's aggregate decode speed so that every
+    episode is loaded-but-serviceable, and decode lengths are clipped so
+    every request fits the smallest sampled KV pool (unserviceable
+    requests would never complete)."""
+    rng = np.random.default_rng(seed)
+    m = int(rng.integers(m_range[0], m_range[1] + 1))
+    pool = list(profile_pool)
+    if len(pool) > 1 and rng.random() < hetero_prob:
+        profiles = tuple(pool[i] for i in rng.integers(0, len(pool), m))
+    else:
+        profiles = (pool[int(rng.integers(0, len(pool)))],) * m
+    pattern = str(patterns[int(rng.integers(0, len(patterns)))])
+    # aggregate service speed relative to the V100 reference
+    speed = sum(V100_LLAMA2_7B.t_decode_base / p.t_decode_base
+                for p in profiles)
+    rate = float(rng.uniform(*rate_per_speed)) * speed
+    # workload mix: full 5-task mixture or a random >=2-task slice
+    if rng.random() < 0.5:
+        tasks = None
+    else:
+        k = int(rng.integers(2, len(TASKS) + 1))
+        tasks = tuple(TASKS[i] for i in rng.permutation(len(TASKS))[:k])
+    samples = generate(n_requests, seed=seed + 1, tasks=tasks)
+    times = arrival_times(n_requests, rate, pattern, seed=seed + 2)
+    cap = min(p.capacity_tokens for p in profiles)
+    budget = int(cap * 0.95)
+    reqs = []
+    for s, at in zip(samples, times):
+        d = min(s.decode_tokens, max(budget - s.prompt_tokens, 1))
+        reqs.append(Request(prompt_tokens=s.prompt_tokens, decode_tokens=d,
+                            arrival=float(at), task=s.task))
+    return Scenario(requests=reqs, profiles=profiles,
+                    name=f"scn{seed}-{pattern}-m{m}", pattern=pattern,
+                    rate=rate, seed=seed,
+                    meta={"tasks": tasks or TASKS, "speed": speed})
+
+
+def scenario_stream(base_seed: int = 0, **kw) -> Callable[[int], Scenario]:
+    """Deterministic episode-index -> Scenario mapping for the batched
+    trainer (each episode a fresh draw; same base_seed -> same stream)."""
+    def fn(ep: int) -> Scenario:
+        return make_scenario(base_seed + 7919 * ep + 13, **kw)
+    return fn
 
 
 def generate_trace(n: int, seed: int = 0) -> List[Sample]:

@@ -12,10 +12,11 @@ relative error -- recorded as a §Perf lever for collective-bound cells.
 """
 from __future__ import annotations
 
-import functools
 from typing import Callable
 
 import jax
+
+from repro.common import compat
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
@@ -51,7 +52,7 @@ def make_compressed_dp_grad_fn(loss_fn: Callable, mesh, batch_axes,
         in_specs = (jax.tree.map(lambda _: P(), params),
                     batch_spec_tree)
         out_specs = jax.tree.map(lambda _: P(), params)
-        return jax.shard_map(local_grads, mesh=mesh, in_specs=in_specs,
+        return compat.shard_map(local_grads, mesh=mesh, in_specs=in_specs,
                              out_specs=out_specs, check_vma=False)(
                                  params, batch)
 

@@ -9,14 +9,14 @@ CPU smoke tests want.
 from __future__ import annotations
 
 import contextlib
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Optional, Tuple
 
 
 @dataclass
 class ParallelContext:
     mesh: object = None                      # jax Mesh or None
-    batch_axes: Tuple[str, ...] = ()         # axes the global batch shards over
+    batch_axes: Tuple[str, ...] = ()     # axes the global batch shards over
     model_axis: Optional[str] = None         # TP axis name
     ep_axes: Tuple[str, ...] = ()            # expert-parallel axes
     seq_axis: Optional[str] = None           # SP axis (long-context)

@@ -9,10 +9,11 @@ DP x TP (+EP), so PP is exercised by its own test/bench on a host mesh.
 """
 from __future__ import annotations
 
-import functools
 from typing import Callable
 
 import jax
+
+from repro.common import compat
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
@@ -63,7 +64,7 @@ def pipeline_apply(stage_fn: Callable, mesh, axis: str, stage_params,
         return outs
 
     p_specs = jax.tree.map(lambda _: P(axis), stage_params)
-    return jax.shard_map(
+    return compat.shard_map(
         local, mesh=mesh,
         in_specs=(p_specs, P()), out_specs=P(),
         check_vma=False)(stage_params, x_micro)

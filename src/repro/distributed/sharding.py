@@ -9,7 +9,7 @@ setting -- except EP expert shards).
 """
 from __future__ import annotations
 
-from typing import Any, Optional, Tuple
+from typing import Any, Tuple
 
 import jax
 from jax.sharding import NamedSharding, PartitionSpec as P

@@ -17,6 +17,10 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# renamed TPUCompilerParams -> CompilerParams in jax 0.5
+_CompilerParams = getattr(pltpu, 'CompilerParams',
+                          getattr(pltpu, 'TPUCompilerParams', None))
+
 NEG_INF = -1e30
 
 
@@ -117,7 +121,7 @@ def decode_attention_kernel(q: jax.Array, k: jax.Array, v: jax.Array,
             pltpu.VMEM((g,), jnp.float32),
             pltpu.VMEM((g, hd), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(*args)

@@ -10,8 +10,7 @@ shape kinds map to the lowered step:
 """
 from __future__ import annotations
 
-import functools
-from typing import Callable, Dict, Tuple
+from typing import Callable, Dict
 
 import jax
 import jax.numpy as jnp

@@ -6,7 +6,7 @@ the whole point of MLA's compressed KV cache.
 """
 from __future__ import annotations
 
-from typing import Dict, Tuple
+from typing import Dict
 
 import jax
 import jax.numpy as jnp

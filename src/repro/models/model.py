@@ -12,7 +12,6 @@ stacked with a leading n_periods axis and the stack is traversed with
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Dict, Optional, Tuple
 
 import jax

@@ -15,9 +15,52 @@ from typing import Any, Dict, Optional, Tuple
 
 import msgpack
 import numpy as np
-import zstandard
+
+try:
+    import zstandard
+except ImportError:          # optional dep: fall back to zlib compression
+    zstandard = None
 
 import jax
+
+
+class _ZlibCompat:
+    """Drop-in stand-in for the zstandard module when it is missing:
+    checkpoints are zlib-compressed instead (larger/slower, same
+    integrity guarantees).  Blobs are tagged so either build can read
+    its own output."""
+
+    class ZstdError(Exception):
+        pass
+
+    @staticmethod
+    def compress(data: bytes) -> bytes:
+        return b"ZLB0" + zlib.compress(data, level=6)
+
+    @staticmethod
+    def decompress(blob: bytes) -> bytes:
+        if not blob.startswith(b"ZLB0"):
+            raise _ZlibCompat.ZstdError(
+                "zstd-compressed checkpoint but zstandard is not "
+                "installed")
+        return zlib.decompress(blob[4:])
+
+
+def _compress(data: bytes) -> bytes:
+    if zstandard is not None:
+        return zstandard.ZstdCompressor(level=3).compress(data)
+    return _ZlibCompat.compress(data)
+
+
+def _decompress(blob: bytes) -> bytes:
+    if zstandard is not None and not blob.startswith(b"ZLB0"):
+        return zstandard.ZstdDecompressor().decompress(blob)
+    return _ZlibCompat.decompress(blob)
+
+
+def _decompress_error():
+    return zstandard.ZstdError if zstandard is not None \
+        else _ZlibCompat.ZstdError
 
 
 def _flatten(tree) -> Dict[str, Any]:
@@ -43,11 +86,11 @@ def serialize(tree, extra: Optional[Dict[str, Any]] = None) -> bytes:
             "crc": zlib.crc32(buf), "data": buf,
         }
     packed = msgpack.packb(payload, use_bin_type=True)
-    return zstandard.ZstdCompressor(level=3).compress(packed)
+    return _compress(packed)
 
 
 def deserialize(blob: bytes, like_tree) -> Tuple[Any, Dict[str, Any]]:
-    packed = zstandard.ZstdDecompressor().decompress(blob)
+    packed = _decompress(blob)
     payload = msgpack.unpackb(packed, raw=False)
     leaves_by_key = {}
     for k, rec in payload["leaves"].items():
@@ -160,6 +203,6 @@ class CheckpointManager:
                 with open(os.path.join(self.dir, name), "rb") as f:
                     return deserialize(f.read(), like_tree)
             except (IOError, ValueError, msgpack.UnpackException,
-                    zstandard.ZstdError):
+                    zlib.error, _decompress_error()):
                 continue
         return None

@@ -3,8 +3,7 @@ int8 gradient compression, AdamW update.  The step is a single pjit-able
 function (params/opt donated)."""
 from __future__ import annotations
 
-import functools
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Callable, Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -68,3 +67,39 @@ def init_train_state(key, cfg: ModelConfig, data_shards: int = 0):
     from repro.models import params as params_lib
     params = params_lib.init_params(key, cfg, data_shards)
     return params, opt_lib.init(params)
+
+
+# -- router-RL training entrypoint ------------------------------------------
+
+def train_router(router_cfg, scenario_fn, n_episodes: int,
+                 batched: bool = True, batch_cfg=None, agent=None,
+                 predict_decode: Optional[Callable] = None,
+                 valid_fn: Optional[Callable] = None,
+                 verbose: bool = False) -> Dict[str, Any]:
+    """Unified entrypoint for training the routing policy (the system's
+    other trainable component, next to the LM train step above).
+
+    ``scenario_fn(ep)`` yields a `workload.Scenario` per episode.  The
+    default path is the batched multi-episode runner
+    (`core.batched_rl.train_batched`); ``batched=False`` falls back to
+    the sequential paper-faithful loop, which requires every scenario to
+    be homogeneous (one hardware profile, cfg.n_instances wide).
+    """
+    from repro.core import batched_rl, rl_router
+
+    if batched:
+        return batched_rl.train_batched(
+            router_cfg, scenario_fn, n_episodes, bcfg=batch_cfg,
+            agent=agent, predict_decode=predict_decode,
+            valid_fn=valid_fn, verbose=verbose)
+    probe = scenario_fn(0)
+    if len(set(probe.profiles)) != 1 or probe.m != router_cfg.n_instances:
+        raise ValueError(
+            "sequential trainer needs homogeneous scenarios of width "
+            f"cfg.n_instances={router_cfg.n_instances}; got m={probe.m}")
+    return rl_router.train(
+        router_cfg, probe.profiles[0],
+        lambda ep: scenario_fn(ep).requests, n_episodes, agent=agent,
+        predict_decode=predict_decode,
+        valid_fn=(lambda: valid_fn().requests) if valid_fn else None,
+        verbose=verbose)

@@ -1,0 +1,217 @@
+"""Batched multi-episode RL runner + heterogeneous scenario generator."""
+import numpy as np
+import pytest
+
+from repro.core import batched_rl, rl_router as rl
+from repro.core.profiles import A100_LLAMA31_8B, V100_LLAMA2_7B
+from repro.core.simulator import Cluster, SimInstance
+from repro.core.workload import (ARRIVAL_PATTERNS, PROFILE_POOL, Scenario,
+                                 arrival_times, generate, make_scenario,
+                                 scenario_stream, to_requests)
+from repro.serving.scheduler import get_scheduler
+
+PROF = V100_LLAMA2_7B
+
+
+def _reqs(n, seed=0, rate=20.0):
+    return to_requests(generate(n, seed=seed), rate=rate, seed=seed + 1)
+
+
+# -- parity: 1-episode batched == sequential ---------------------------------
+
+def test_batched_single_episode_matches_sequential_evaluate():
+    """A 1-episode greedy batched run must reproduce the sequential
+    rl_router path decision for decision: same completions, same
+    per-request finish times, same summary metrics."""
+    cfg = rl.RouterConfig(variant="guided", n_instances=3,
+                          q_arch="decomposed", seed=0)
+    agent = rl.make_agent(cfg)
+    reqs_seq = _reqs(120, seed=7)
+    reqs_bat = _reqs(120, seed=7)
+    seq = rl.evaluate(cfg, PROF, agent, reqs_seq)
+    bat = batched_rl.evaluate_scenarios(
+        cfg, agent, [Scenario.homogeneous(PROF, 3, reqs_bat)])[0]
+    assert seq["n"] == bat["n"] == 120
+    for a, b in zip(reqs_seq, reqs_bat):
+        assert a.finished == pytest.approx(b.finished, abs=1e-9)
+        assert a.instance == b.instance
+        assert a.preemptions == b.preemptions
+    for key in ("e2e_mean", "ttft_mean", "makespan", "preemptions",
+                "router_wait_mean", "spikes"):
+        assert seq[key] == pytest.approx(bat[key], rel=1e-9), key
+
+
+def test_batched_parity_holds_for_mlp_arch_and_baseline_variant():
+    cfg = rl.RouterConfig(variant="baseline", n_instances=2,
+                          q_arch="mlp", seed=3)
+    agent = rl.make_agent(cfg)
+    ra, rb = _reqs(60, seed=11), _reqs(60, seed=11)
+    seq = rl.evaluate(cfg, PROF, agent, ra)
+    bat = batched_rl.evaluate_scenarios(
+        cfg, agent, [Scenario.homogeneous(PROF, 2, rb)])[0]
+    assert seq["e2e_mean"] == pytest.approx(bat["e2e_mean"], rel=1e-9)
+
+
+# -- padding: narrow scenarios under a wide agent ----------------------------
+
+def test_padded_narrow_scenario_completes_all_requests():
+    cfg = rl.RouterConfig(variant="guided", n_instances=4, seed=0)
+    agent = rl.make_agent(cfg, m=4)          # padded width 4
+    scen = Scenario.homogeneous(PROF, 2, _reqs(60, seed=5))
+    stats = batched_rl.evaluate_scenarios(cfg, agent, [scen], m_max=4)[0]
+    assert stats["n"] == 60
+    assert all(r.instance in (0, 1) for r in scen.requests)
+
+
+def test_pad_state_and_mask_layout():
+    from repro.core import state as sl
+    dims = sl.INSTANCE_DIMS + 1
+    s = np.arange(dims * 2 + sl.ROUTER_DIMS, dtype=np.float32)
+    p = sl.pad_state(s, 2, 5)
+    assert p.shape == (dims * 5 + sl.ROUTER_DIMS,)
+    np.testing.assert_array_equal(p[:dims * 2], s[:dims * 2])
+    assert not p[dims * 2:dims * 5].any()        # padded blocks are zeros
+    np.testing.assert_array_equal(p[dims * 5:], s[dims * 2:])
+    m = sl.pad_mask(np.array([True, False, True]), 2, 5)
+    assert m.tolist() == [True, False, False, False, False, True]
+
+
+def test_scenario_wider_than_m_max_raises():
+    cfg = rl.RouterConfig(variant="guided", n_instances=2, seed=0)
+    agent = rl.make_agent(cfg, m=2)
+    scen = Scenario.homogeneous(PROF, 4, _reqs(10, seed=1))
+    with pytest.raises(ValueError, match="m_max"):
+        batched_rl.evaluate_scenarios(cfg, agent, [scen], m_max=2)
+
+
+# -- training smoke: shared buffer, heterogeneous stream ---------------------
+
+def test_batched_training_on_hetero_stream_completes():
+    cfg = rl.RouterConfig(variant="guided", n_instances=4,
+                          explore_episodes=4, q_arch="decomposed", seed=0)
+    bcfg = batched_rl.BatchedRLConfig(n_envs=3, m_max=6)
+    out = batched_rl.train_batched(
+        cfg, scenario_stream(0, n_requests=40), 5, bcfg=bcfg)
+    hist = out["history"]
+    assert [h["episode"] for h in hist] == list(range(5))
+    for h in hist:
+        assert h["n"] == 40                  # every request completed
+    assert out["agent"].buffer.size > 0      # shared replay buffer fed
+    # episodes came from different cluster shapes/patterns
+    assert len({(h["m"], h["pattern"]) for h in hist}) > 1
+
+
+# -- scenario generator invariants -------------------------------------------
+
+def test_make_scenario_deterministic_and_well_formed():
+    for seed in (0, 1, 17):
+        a = make_scenario(seed)
+        b = make_scenario(seed)
+        assert a.name == b.name and a.m == b.m
+        assert [r.prompt_tokens for r in a.requests] == \
+            [r.prompt_tokens for r in b.requests]
+        assert [r.arrival for r in a.requests] == \
+            [r.arrival for r in b.requests]
+        assert 2 <= a.m <= 6
+        assert all(p in PROFILE_POOL for p in a.profiles)
+        assert a.pattern in ARRIVAL_PATTERNS
+        arr = [r.arrival for r in a.requests]
+        assert all(t >= 0 for t in arr)
+        assert arr == sorted(arr)
+        # every request fits the smallest KV pool in the cluster
+        cap = min(p.capacity_tokens for p in a.profiles)
+        for r in a.requests:
+            assert r.prompt_tokens + r.decode_tokens <= cap
+            assert r.decode_tokens >= 1
+
+
+def test_scenario_stream_varies_shape_and_hardware():
+    fn = scenario_stream(0)
+    scens = [fn(ep) for ep in range(12)]
+    assert len({s.m for s in scens}) > 1
+    assert len({s.pattern for s in scens}) > 1
+    assert any(len(set(s.profiles)) > 1 for s in scens)   # mixed hardware
+
+
+def test_bursty_arrivals_are_burstier_than_poisson():
+    """Coefficient of variation of inter-arrival gaps: Poisson ~= 1,
+    the MMPP bursty pattern substantially above."""
+    def cv(pattern):
+        out = []
+        for seed in range(4):
+            t = arrival_times(800, 20.0, pattern, seed=seed)
+            gaps = np.diff(np.concatenate([[0.0], t]))
+            out.append(np.std(gaps) / np.mean(gaps))
+        return float(np.mean(out))
+    assert cv("bursty") > 1.4 * cv("poisson")
+
+
+def test_diurnal_arrivals_follow_sinusoid():
+    """Mean rate over the positive half-period of the sinusoid must
+    exceed the negative half-period's."""
+    t = arrival_times(4000, 20.0, "diurnal", seed=0, period=240.0,
+                      depth=0.8)
+    phase = (t % 240.0) / 240.0
+    peak = np.sum(phase < 0.5)           # sin > 0 half
+    trough = np.sum(phase >= 0.5)
+    assert peak > 1.3 * trough
+
+
+def test_arrival_times_mean_rate_close_to_nominal():
+    for pattern in ARRIVAL_PATTERNS:
+        t = arrival_times(3000, 25.0, pattern, seed=2)
+        rate = 3000 / t[-1]
+        assert 0.6 * 25.0 < rate < 1.6 * 25.0, pattern
+
+
+# -- heterogeneous cluster plumbing ------------------------------------------
+
+def test_cluster_accepts_per_instance_profiles():
+    profs = (V100_LLAMA2_7B, A100_LLAMA31_8B)
+    c = Cluster(profs, 2)
+    assert c.instances[0].profile is V100_LLAMA2_7B
+    assert c.instances[1].profile is A100_LLAMA31_8B
+    with pytest.raises(ValueError):
+        Cluster(profs, 3)
+
+
+def test_backlog_accounting_survives_elastic_add():
+    """Instances added mid-episode must inherit the env's observer hooks,
+    or the incremental backlog penalty drifts (decode events on the new
+    instance would never credit _T while finishes still debit it)."""
+    cfg = rl.RouterConfig(variant="guided", n_instances=2, seed=0)
+    env = rl.RoutingEnv(cfg, PROF)
+    env.reset(_reqs(40, seed=9))
+    done, added = False, False
+    for _ in range(5000):
+        if not done:
+            a = int(np.argmax(env.guidance_bonus()[:env.cluster.m])) \
+                if env.cluster.central else env.cluster.m
+            _, _, done, _ = env.step(a)
+        if not added and env.cluster.t > 1.0:
+            env.cluster.add_instance()
+            added = True
+        if done:
+            break
+    assert done and added
+    # all requests finished -> exact accounting returns to zero
+    assert env._backlog_penalty() == pytest.approx(0.0, abs=1e-9)
+
+
+def test_incremental_token_sums_match_rescan():
+    """The O(1) resident/queue token sums must equal a full recount at
+    every tick (guards the incremental bookkeeping in _iteration)."""
+    inst = SimInstance(PROF, get_scheduler("fcfs"), 0)
+    for r in _reqs(40, seed=3, rate=200.0):
+        inst.submit(r)
+    for _ in range(3000):
+        inst.run_until(inst.clock + 0.02)
+        assert inst.resident_token_sum() == pytest.approx(
+            sum(r.total_context for r in inst.residents))
+        assert inst.queued_prompt_sum() == pytest.approx(
+            sum(r.prompt_tokens for r in inst.queue))
+        assert all(r.decoded == 0 and r.prefilled == 0
+                   for r in inst.queue)
+        if len(inst.completed) == 40:
+            break
+    assert len(inst.completed) == 40

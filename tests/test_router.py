@@ -2,11 +2,11 @@
 heuristic policies, DQN machinery, guidance properties."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_support import given, settings, st
 
 from repro.core import impact
 from repro.core.profiles import V100_LLAMA2_7B, fit, tpu_v5e_profile
-from repro.core.workload import generate, to_requests, table1_stats
+from repro.core.workload import generate, table1_stats
 
 PROF = V100_LLAMA2_7B
 

@@ -1,7 +1,6 @@
 """Simulator + cluster invariants (unit + hypothesis property tests)."""
-import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_support import given, settings, st
 
 from repro.core.policies import make_policy
 from repro.core.profiles import V100_LLAMA2_7B

@@ -4,7 +4,6 @@ import dataclasses
 
 import jax
 import numpy as np
-import pytest
 
 from repro.configs import get_config
 from repro.core import rl_router as rl
