@@ -1,0 +1,120 @@
+"""Gateway policy comparison on one bursty multi-tenant stream.
+
+Serves the SAME open-loop bursty multi-tenant scenario through the
+serving gateway under all four routing policies -- round-robin, JSQ
+(least outstanding work), the r_mixing workload-impact heuristic, and
+the trained RL router -- with the LEARNED length predictor (micro-batch
+wrapper, LRU cache) in the routing hot path; no oracle decode lengths
+anywhere.  The RL agent itself is trained with the predictor's d-hat in
+the loop (``train_router(length_predictor=...)``).
+
+Emits per-policy windowed P95/P50 E2E, TTFT P95, SLO attainment, and
+predictor-service counters.  Acceptance (asserted): the workload-aware
+policies (mixing, rl) beat round-robin on P95 E2E.
+"""
+from __future__ import annotations
+
+import os
+
+os.environ.setdefault(
+    "XLA_FLAGS",
+    "--xla_cpu_multi_thread_eigen=false intra_op_parallelism_threads=1")
+
+import time
+
+from benchmarks.common import emit
+from repro.core import rl_router as rl
+from repro.core import workload as wl
+from repro.core.predictor import quick_bucket_predictor
+from repro.core.profiles import V100_LLAMA2_7B
+from repro.serving.gateway import (Gateway, GatewayConfig,
+                                   MicroBatchPredictor)
+from repro.serving.metrics import SLO
+from repro.serving.policies import RLPolicy, make_gateway_policy
+from repro.training.train_loop import train_router
+
+PROF = V100_LLAMA2_7B
+M = 4
+N = 300
+# loaded-but-serviceable (the paper's operating point): beyond ~6 rps
+# the 4x V100 cluster saturates into a makespan-bound regime where no
+# routing decision matters; at ~2.5 rps bursty, placement quality
+# dominates the tail
+RATE = 2.5
+PROBE_RATE = 10.0          # deliberately saturating (backpressure probe)
+STREAM_SEED = 42
+TRAIN_EPISODES = 6
+POLICIES = ("rr", "jsq", "mixing", "rl")
+
+
+def _stream(rate=RATE):
+    """Fresh copy of the one bursty multi-tenant evaluation stream."""
+    return wl.make_tenant_scenario(seed=STREAM_SEED, n_requests=N,
+                                   rate=rate, pattern="bursty",
+                                   profiles=(PROF,) * M)
+
+
+def _train_scenario(ep: int):
+    samples = wl.generate(120, seed=1000 + ep)
+    reqs = wl.to_requests(samples, rate=RATE, seed=2000 + ep)
+    return wl.Scenario.homogeneous(PROF, M, reqs, name=f"train-{ep}",
+                                   samples=samples)
+
+
+def main():
+    t0 = time.time()
+    predictor = quick_bucket_predictor(PROF, n_train=2000, epochs=2,
+                                       seed=0)
+    acc = predictor.accuracy(wl.generate(500, seed=77))
+    emit("gateway_predictor", (time.time() - t0) * 1e6,
+         f"bucket_acc={acc:.3f} n_train=2000")
+
+    t0 = time.time()
+    cfg = rl.RouterConfig(variant="guided", n_instances=M,
+                          explore_episodes=max(TRAIN_EPISODES - 2, 2),
+                          q_arch="decomposed", seed=0)
+    out = train_router(cfg, _train_scenario, TRAIN_EPISODES,
+                       length_predictor=predictor)
+    emit("gateway_rl_train", (time.time() - t0) * 1e6,
+         f"episodes={TRAIN_EPISODES} predictor_in_loop=1")
+
+    slo = SLO(ttft_s=10.0, tbt_s=0.5, e2e_s=60.0)
+    p95 = {}
+    for name in POLICIES:
+        policy = (RLPolicy(out["agent"], cfg) if name == "rl"
+                  else make_gateway_policy(name, cfg))
+        length = MicroBatchPredictor(predictor)
+        gw = Gateway(GatewayConfig(slo=slo), (PROF,) * M, policy,
+                     length=length)
+        t0 = time.time()
+        stats = gw.run(_stream())
+        wall = time.time() - t0
+        snap = stats["snapshot"]
+        e2e, ttft = snap["e2e"], snap["ttft"]
+        p95[name] = e2e["p95"]
+        emit(f"gateway_{name}", wall / max(stats["n"], 1) * 1e6,
+             f"p95_e2e={e2e['p95']:.2f} p50_e2e={e2e['p50']:.2f} "
+             f"p95_ttft={ttft['p95']:.2f} slo={snap['slo_rate']:.3f} "
+             f"n={stats['n']} preempt={stats['preemptions']} "
+             f"pred_forwards={length.forwards} "
+             f"pred_hit={length.hits}")
+
+    # backpressure probe: bounded queue on a deliberately saturating
+    # stream, shed mode
+    gw = Gateway(GatewayConfig(queue_cap=16, on_full="shed", slo=slo),
+                 (PROF,) * M, make_gateway_policy("mixing", cfg),
+                 length=MicroBatchPredictor(predictor))
+    stats = gw.run(_stream(rate=PROBE_RATE))
+    emit("gateway_backpressure", 0.0,
+         f"queue_cap=16 probe_rate={PROBE_RATE:g} shed={stats['shed']} "
+         f"admitted={stats['admitted']} "
+         f"shed_rate={stats['snapshot']['shed_rate']:.3f}")
+
+    # acceptance: workload-aware routing beats round robin on P95 E2E
+    # with the learned predictor (not the oracle) in the loop
+    assert p95["mixing"] < p95["rr"], (p95["mixing"], p95["rr"])
+    assert p95["rl"] < p95["rr"], (p95["rl"], p95["rr"])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,176 @@
+"""Perf-trend gate: compare a ``benchmarks/run.py --json`` result
+against the committed ``benchmarks/baseline.json`` and fail on
+regressions beyond a tolerance band.
+
+  python -m benchmarks.run --json bench.json fig4 table1 gateway
+  python -m benchmarks.trend bench.json
+
+Two classes of check:
+
+  * **derived metrics** (deterministic, machine-independent: accuracies,
+    simulated latencies, SLO rates, preemption counts): any ``key=value``
+    numeric pair in a row's derived column whose key has a known
+    direction is gated at ``--tol`` relative change (plus an absolute
+    floor so zero-baselines don't trip on noise);
+  * **wall time** (machine-dependent: per-bench seconds): gated only at
+    ``--time-factor`` x the baseline, generous enough for runner
+    variance but a backstop against order-of-magnitude blowups.
+
+Unknown metric keys and benches absent from the baseline are reported
+but never fail -- the gate only defends what the baseline records.
+Update the baseline deliberately:
+``python -m benchmarks.run --json benchmarks/baseline.json <benches>``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import re
+import sys
+from typing import Dict, List, Optional, Tuple
+
+# metric-name prefixes -> direction ("low" = lower is better)
+LOWER_IS_BETTER = ("p50", "p95", "p99", "e2e", "ttft", "tbt", "us",
+                   "seconds", "preempt", "shed", "loss", "wait",
+                   "makespan", "spikes")
+HIGHER_IS_BETTER = ("acc", "bucket_acc", "slo", "speedup", "eps",
+                    "throughput", "attain")
+
+_NUM = re.compile(r"([A-Za-z_][\w.]*)=(-?\d+(?:\.\d+)?(?:e-?\d+)?)")
+
+
+def direction(key: str) -> Optional[str]:
+    k = key.lower()
+    if any(k.startswith(p) for p in HIGHER_IS_BETTER):
+        return "high"
+    if any(k.startswith(p) for p in LOWER_IS_BETTER):
+        return "low"
+    return None
+
+
+def row_direction(row_name: str) -> Optional[str]:
+    """Direction for a BARE-value row (derived is a single number, no
+    key=value pairs), inferred from the row name's ``_``-tokens -- e.g.
+    ``table1_ours_hint_unequal_acc`` gates as an accuracy."""
+    for tok in row_name.lower().split("_"):
+        d = direction(tok)
+        if d is not None:
+            return d
+    return None
+
+
+def parse_metrics(derived: str) -> Dict[str, float]:
+    out = {k: float(v) for k, v in _NUM.findall(derived or "")}
+    if not out:
+        try:
+            out["_value"] = float(derived)
+        except (TypeError, ValueError):
+            pass
+    return out
+
+
+def _index(report: dict) -> Tuple[Dict[str, dict], Dict[str, dict]]:
+    """-> ({bench: result}, {"bench/row": metrics})."""
+    benches, rows = {}, {}
+    for res in report.get("results", []):
+        benches[res["bench"]] = res
+        for row in res.get("rows", []):
+            rows[f"{res['bench']}/{row['name']}"] = parse_metrics(
+                row.get("derived", ""))
+    return benches, rows
+
+
+def compare(current: dict, baseline: dict, tol: float = 0.35,
+            time_factor: float = 4.0, abs_floor: float = 1.0,
+            frac_tol: float = 0.15) -> Tuple[List[str], List[str]]:
+    """-> (regressions, notes).  Empty regressions = gate passes.
+
+    Fraction-scale metrics (baseline in [0, 1]: accuracies, SLO/shed
+    rates) are gated at the tighter ``frac_tol`` band -- a generic
+    relative ``tol`` wide enough for latency jitter would let an
+    accuracy collapse to half its value pass silently."""
+    regressions: List[str] = []
+    notes: List[str] = []
+    cur_b, cur_r = _index(current)
+    base_b, base_r = _index(baseline)
+    for name, base in base_b.items():
+        cur = cur_b.get(name)
+        if cur is None:
+            notes.append(f"bench {name}: in baseline but not run "
+                         "(not gated)")
+            continue
+        if not cur.get("ok", False):
+            regressions.append(f"bench {name}: FAILED in current run")
+            continue
+        bs, cs = base.get("seconds"), cur.get("seconds")
+        if bs and cs and cs > bs * time_factor:
+            regressions.append(
+                f"bench {name}: wall time {cs:.1f}s > "
+                f"{time_factor:g}x baseline {bs:.1f}s")
+    for key, base_m in base_r.items():
+        cur_m = cur_r.get(key)
+        if cur_m is None:
+            bench = key.split("/", 1)[0]
+            if bench in cur_b:
+                regressions.append(f"row {key}: missing from current run")
+            continue
+        for metric, base_v in base_m.items():
+            d = (row_direction(key.rsplit("/", 1)[-1])
+                 if metric == "_value" else direction(metric))
+            if d is None or metric not in cur_m:
+                continue
+            cur_v = cur_m[metric]
+            delta = cur_v - base_v
+            if 0.0 <= base_v <= 1.0:
+                band = frac_tol * max(base_v, 0.05)
+            else:
+                band = max(tol * abs(base_v), abs_floor * tol)
+            if (d == "low" and delta > band) or \
+                    (d == "high" and -delta > band):
+                regressions.append(
+                    f"{key}: {metric} {base_v:g} -> {cur_v:g} "
+                    f"(band +-{band:g}, {d}er is better)")
+    for key in cur_r:
+        if key not in base_r:
+            notes.append(f"row {key}: new (not in baseline)")
+    return regressions, notes
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(
+        description="gate a bench run against the committed baseline")
+    ap.add_argument("current", help="run.py --json output to check")
+    ap.add_argument("--baseline", default="benchmarks/baseline.json")
+    ap.add_argument("--tol", type=float, default=0.35,
+                    help="relative tolerance on derived metrics")
+    ap.add_argument("--time-factor", type=float, default=4.0,
+                    help="allowed wall-time blowup per bench")
+    ap.add_argument("--abs-floor", type=float, default=1.0,
+                    help="absolute scale floor for near-zero baselines")
+    ap.add_argument("--frac-tol", type=float, default=0.15,
+                    help="band for fraction-scale metrics (rates, accs)")
+    args = ap.parse_args()
+    with open(args.current) as f:
+        current = json.load(f)
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    regressions, notes = compare(current, baseline, tol=args.tol,
+                                 time_factor=args.time_factor,
+                                 abs_floor=args.abs_floor,
+                                 frac_tol=args.frac_tol)
+    for n in notes:
+        print(f"note: {n}")
+    if regressions:
+        print(f"\nPERF-TREND GATE FAILED ({len(regressions)}):")
+        for r in regressions:
+            print(f"  REGRESSION {r}")
+        print("\nIf intentional, refresh the baseline: "
+              "python -m benchmarks.run --json benchmarks/baseline.json "
+              "<benches>")
+        sys.exit(1)
+    print("perf-trend gate: OK "
+          f"({len(_index(baseline)[1])} baseline rows checked)")
+
+
+if __name__ == "__main__":
+    main()

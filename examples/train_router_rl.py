@@ -7,8 +7,11 @@ for the paper-faithful per-decision loop.  --hetero trains on the
 heterogeneous scenario stream (mixed V100/A100 clusters, bursty and
 diurnal arrivals) instead of the fixed paper setup.
 
+--predictor trains a decode-bucket predictor first and routes on its
+d-hat during RL training (no oracle decode lengths in the loop).
+
   PYTHONPATH=src python examples/train_router_rl.py [n_episodes]
-      [--sequential] [--hetero]
+      [--sequential] [--hetero] [--predictor]
 """
 import os
 import sys
@@ -34,11 +37,21 @@ def reqs(seed):
     return to_requests(generate(N, seed=seed), rate=RATE, seed=seed + 5000)
 
 
+def scen(seed, name):
+    """Homogeneous paper-setup scenario WITH prompt content kept, so the
+    learned length predictor can replace the oracle decode length."""
+    samples = generate(N, seed=seed)
+    return Scenario.homogeneous(
+        PROF, M, to_requests(samples, rate=RATE, seed=seed + 5000),
+        name=name, samples=samples)
+
+
 if __name__ == "__main__":
     args = [a for a in sys.argv[1:] if not a.startswith("--")]
     episodes = int(args[0]) if args else 12
     sequential = "--sequential" in sys.argv
     hetero = "--hetero" in sys.argv
+    use_predictor = "--predictor" in sys.argv
     for name in ("round_robin", "jsq", "impact_greedy"):
         st = run_heuristic(Cluster(PROF, M), reqs(991),
                            make_policy(name, PROF))
@@ -51,13 +64,18 @@ if __name__ == "__main__":
         scen_fn = scenario_stream(0, n_requests=N)
         bcfg = batched_rl.BatchedRLConfig(m_max=6)
     else:
-        scen_fn = lambda ep: Scenario.homogeneous(     # noqa: E731
-            PROF, M, reqs(100 + ep), name=f"paper-{ep}")
+        scen_fn = lambda ep: scen(100 + ep, f"paper-{ep}")  # noqa: E731
         bcfg = batched_rl.BatchedRLConfig(m_max=M)
+    predictor = None
+    if use_predictor:
+        from repro.core.predictor import quick_bucket_predictor
+        print("training length predictor (d-hat replaces the oracle)...")
+        predictor = quick_bucket_predictor(PROF, n_train=2000, epochs=2)
     t0 = time.time()
     out = train_router(
         cfg, scen_fn, episodes, batched=not sequential, batch_cfg=bcfg,
-        valid_fn=lambda: Scenario.homogeneous(PROF, M, reqs(555)),
+        length_predictor=predictor,
+        valid_fn=lambda: scen(555, "valid"),
         verbose=True)
     dt = time.time() - t0
     mode = "sequential" if sequential else "batched"

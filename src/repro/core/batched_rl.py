@@ -62,6 +62,10 @@ class BatchedRLConfig:
     learn_batch_size: int = 256
     sync_learn: bool = False         # True: block on each gradient step
     valid_every: int = 4             # validate every k completed episodes
+    # prioritized replay over the SHARED buffer: |TD| priorities with
+    # IS-weight correction (the packed-row weight column).  Uniform
+    # sampling (False) remains the validated default.
+    prioritized: bool = False
 
 
 class _Slot:
@@ -185,6 +189,8 @@ def train_batched(cfg: rl.RouterConfig,
             agent.cfg.batch_size != bcfg.learn_batch_size:
         agent.cfg = dataclasses.replace(agent.cfg,
                                         batch_size=bcfg.learn_batch_size)
+    if bcfg.prioritized and not agent.cfg.prioritized:
+        agent.cfg = dataclasses.replace(agent.cfg, prioritized=True)
     scale = 1.0 if cfg.potential_shaping else cfg.reward_scale
     gp = cfg.nstep_gamma ** np.arange(max(cfg.nstep, 1), dtype=np.float64)
     history: List[Dict] = []

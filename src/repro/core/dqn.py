@@ -37,6 +37,15 @@ class DQNConfig:
     q_arch: str = "mlp"
     inst_dims: int = 0
     router_dims: int = 0
+    # prioritized experience replay (Schaul et al. 2015), proportional
+    # variant.  Default OFF: uniform sampling with unit IS weights (the
+    # packed row always carries a weight column, so both modes share one
+    # compiled train_batch).  Priorities are |TD error| + per_eps; new
+    # transitions enter at the current max priority.
+    prioritized: bool = False
+    per_alpha: float = 0.6          # priority exponent
+    per_beta: float = 0.4           # IS-correction exponent (fixed)
+    per_eps: float = 1e-3
 
 
 def init_mlp(key, dims) -> Dict:
@@ -111,16 +120,19 @@ def train_batch(cfg: DQNConfig, params: Dict, opt: Dict, target: Dict,
     chained learn steps and defeats the batched runner's async overlap;
     the Q network is ~100 KB, so the copies are free by comparison.
 
-    ``batch`` is one packed [B, 2*state_dim + 3 + n_actions] float32
-    array ([s | s2 | a | r | done | mask2]) so learn() pays a single
-    host->device transfer instead of six."""
+    ``batch`` is one packed [B, 2*state_dim + 4 + n_actions] float32
+    array ([s | s2 | a | r | done | mask2 | w]) so learn() pays a single
+    host->device transfer instead of seven.  ``w`` is the prioritized
+    replay importance weight (1.0 under uniform sampling); the returned
+    ``td_abs`` feeds the priority update."""
     d = cfg.state_dim
     s = batch[:, :d]
     s2 = batch[:, d:2 * d]
     a = batch[:, 2 * d].astype(jnp.int32)
     r = batch[:, 2 * d + 1]
     done = batch[:, 2 * d + 2]
-    mask2 = batch[:, 2 * d + 3:] > 0.5
+    mask2 = batch[:, 2 * d + 3:2 * d + 3 + cfg.n_actions] > 0.5
+    w = batch[:, 2 * d + 3 + cfg.n_actions]
 
     def loss_fn(p):
         q = apply_q(cfg, p, s)
@@ -131,10 +143,11 @@ def train_batch(cfg: DQNConfig, params: Dict, opt: Dict, target: Dict,
         q2_target = apply_q(cfg, target, s2)
         q2 = jnp.take_along_axis(q2_target, a_star[:, None], axis=1)[:, 0]
         y = r + cfg.gamma * (1.0 - done) * q2
-        return jnp.mean(_huber(q_sa - jax.lax.stop_gradient(y),
-                               cfg.huber_delta))
+        td = q_sa - jax.lax.stop_gradient(y)
+        return jnp.mean(w * _huber(td, cfg.huber_delta)), jnp.abs(td)
 
-    loss, grads = jax.value_and_grad(loss_fn)(params)
+    (loss, td_abs), grads = jax.value_and_grad(loss_fn,
+                                               has_aux=True)(params)
     # inline Adam (pytree-generic)
     step = opt["step"] + 1
     b1, b2, eps = 0.9, 0.999, 1e-8
@@ -149,18 +162,29 @@ def train_batch(cfg: DQNConfig, params: Dict, opt: Dict, target: Dict,
         params, new_m, new_v)
     new_target = jax.tree.map(
         lambda t, p: (1.0 - cfg.tau) * t + cfg.tau * p, target, new_p)
-    return new_p, {"m": new_m, "v": new_v, "step": step}, new_target, loss
+    return (new_p, {"m": new_m, "v": new_v, "step": step}, new_target,
+            loss, td_abs)
 
 
 class ReplayBuffer:
-    """Ring buffer with PACKED rows [s | s2 | a | r | done | mask2]: one
-    contiguous float32 matrix, so sampling is a single gather and the
-    learner a single host->device transfer."""
+    """Ring buffer with PACKED rows [s | s2 | a | r | done | mask2 | w]:
+    one contiguous float32 matrix, so sampling is a single gather and
+    the learner a single host->device transfer.  The trailing column is
+    the importance weight consumed by the weighted TD loss -- 1.0 at
+    insert; prioritized sampling overwrites it in the sampled COPY, so
+    the stored rows stay weight-neutral."""
 
     def __init__(self, cfg: DQNConfig):
         n, d, a = cfg.buffer_size, cfg.state_dim, cfg.n_actions
         self.d = d
-        self.data = np.zeros((n, 2 * d + 3 + a), np.float32)
+        self.data = np.zeros((n, 2 * d + 4 + a), np.float32)
+        self.prio = np.zeros((n,), np.float64)
+        # per-slot write sequence: a deferred priority update for a slot
+        # the ring has since overwritten must be dropped, or the fresh
+        # transition loses its max-priority first-replay guarantee
+        self.write_seq = np.zeros((n,), np.int64)
+        self.seq = 0
+        self.max_prio = 1.0
         self.size = 0
         self.ptr = 0
         self.cap = n
@@ -173,13 +197,53 @@ class ReplayBuffer:
         row[2 * d] = a
         row[2 * d + 1] = r
         row[2 * d + 2] = done
-        row[2 * d + 3:] = mask2
+        row[2 * d + 3:-1] = mask2
+        row[-1] = 1.0
+        # new experience enters at max priority so it is seen at least
+        # once before its TD error is known (Schaul et al. 2015)
+        self.prio[self.ptr] = self.max_prio
+        self.seq += 1
+        self.write_seq[self.ptr] = self.seq
         self.ptr = (self.ptr + 1) % self.cap
         self.size = min(self.size + 1, self.cap)
 
     def sample(self, rng: np.random.Generator, batch: int) -> np.ndarray:
         idx = rng.integers(0, self.size, size=batch)
         return self.data[idx]
+
+    def sample_prioritized(self, rng: np.random.Generator, batch: int,
+                           alpha: float, beta: float
+                           ) -> Tuple[np.ndarray, np.ndarray]:
+        """Proportional PER draw; returns (rows, idx) with the rows'
+        weight column set to the normalized IS correction.
+
+        O(size) per draw (powered priorities + weighted choice): ~1 ms
+        at the 200k default, paid every learn_every_rounds -- small
+        next to the gradient step.  A sum-tree would make it
+        O(batch log n) if the buffer ever grows past ~1M."""
+        p = self.prio[:self.size] ** alpha
+        p /= p.sum()
+        idx = rng.choice(self.size, size=batch, p=p)
+        rows = self.data[idx]                     # fancy index = copy
+        w = (self.size * p[idx]) ** -beta
+        rows[:, -1] = w / w.max()
+        return rows, idx
+
+    def update_priorities(self, idx: np.ndarray, td_abs: np.ndarray,
+                          eps: float = 1e-3,
+                          expect_seq: Optional[np.ndarray] = None):
+        """Set |TD|-based priorities.  ``expect_seq`` (the slots'
+        ``write_seq`` captured at sample time) drops updates for slots
+        the ring has overwritten since."""
+        idx = np.asarray(idx)
+        pr = np.abs(np.asarray(td_abs, np.float64)) + eps
+        if expect_seq is not None:
+            live = self.write_seq[idx] == expect_seq
+            idx, pr = idx[live], pr[live]
+            if idx.size == 0:
+                return
+        self.prio[idx] = pr
+        self.max_prio = max(self.max_prio, float(pr.max()))
 
 
 class DQNAgent:
@@ -196,6 +260,7 @@ class DQNAgent:
         self.steps = 0
         self.r_mean = 0.0
         self._r_init = False
+        self._pending_prio = None      # (idx, td device array) to apply
 
     def act(self, state: np.ndarray, mask: np.ndarray,
             epsilon: float = 0.0,
@@ -248,6 +313,19 @@ class DQNAgent:
             r = r - self.r_mean
         self.buffer.add(s, a, r, s2, done, mask2)
 
+    def _resolve_priorities(self):
+        """Apply the TD-error priorities of the previous prioritized
+        step.  Deferred one learn call so the async-dispatched gradient
+        step is (almost always) already materialized when we read it
+        back -- priority updates then cost no synchronization."""
+        if self._pending_prio is None:
+            return
+        idx, td, stamps = self._pending_prio
+        self._pending_prio = None
+        self.buffer.update_priorities(idx, np.asarray(td),
+                                      eps=self.cfg.per_eps,
+                                      expect_seq=stamps)
+
     def learn(self, sync: bool = True) -> Optional[float]:
         """One gradient step.  ``sync=False`` skips the loss read-back so
         the jitted update is dispatched asynchronously: on CPU the XLA
@@ -257,10 +335,22 @@ class DQNAgent:
         the new params are ready)."""
         if self.buffer.size < self.cfg.batch_size:
             return None
-        batch = jnp.asarray(self.buffer.sample(self.rng,
-                                               self.cfg.batch_size))
-        self.params, self.opt, self.target, loss = train_batch(
+        self._resolve_priorities()
+        if self.cfg.prioritized:
+            rows, idx = self.buffer.sample_prioritized(
+                self.rng, self.cfg.batch_size,
+                self.cfg.per_alpha, self.cfg.per_beta)
+        else:
+            rows, idx = self.buffer.sample(self.rng,
+                                           self.cfg.batch_size), None
+        batch = jnp.asarray(rows)
+        self.params, self.opt, self.target, loss, td_abs = train_batch(
             self.cfg, self.params, self.opt, self.target, batch)
+        if idx is not None:
+            self._pending_prio = (idx, td_abs,
+                                  self.buffer.write_seq[idx].copy())
+            if sync:
+                self._resolve_priorities()
         self.steps += 1
         return float(loss) if sync else None
 

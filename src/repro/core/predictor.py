@@ -117,6 +117,11 @@ def apply(params, cfg: PredictorConfig, tokens: jax.Array) -> jax.Array:
     return pooled @ params["head"]
 
 
+# jitted inference entry (one compile per (cfg, batch-shape); callers
+# pad to a fixed batch so the serving hot path compiles exactly once)
+apply_jit = jax.jit(apply, static_argnames=("cfg",))
+
+
 @functools.partial(jax.jit, static_argnames=("cfg",), donate_argnums=(0, 1))
 def _train_step(params, opt, cfg: PredictorConfig, tokens, labels):
     def loss_fn(p):
@@ -181,13 +186,23 @@ class BucketPredictor:
                 print(f"  predictor epoch {ep}: loss {float(loss):.3f}")
         return losses
 
-    def predict(self, samples: Sequence[wl.Sample]) -> np.ndarray:
+    def predict(self, samples: Sequence[wl.Sample],
+                chunk: int = 512) -> np.ndarray:
+        """Batched greedy prediction.  Chunks are PADDED to ``chunk``
+        rows so the jitted forward compiles once regardless of the
+        request count (pad rows are all-pad-token and discarded)."""
         cfg = self.cfg
         x = np.stack([encode_sample(cfg, s) for s in samples])
         out = []
-        for i in range(0, len(x), 512):
-            logits = apply(self.params, cfg, jnp.asarray(x[i:i + 512]))
-            out.append(np.argmax(np.asarray(logits), -1))
+        pad_row = np.full((1, cfg.seq_len), _pad_token(cfg), np.int32)
+        for i in range(0, len(x), chunk):
+            part = x[i:i + chunk]
+            n = len(part)
+            if n < chunk:
+                part = np.concatenate(
+                    [part, np.repeat(pad_row, chunk - n, axis=0)])
+            logits = apply_jit(self.params, cfg, jnp.asarray(part))
+            out.append(np.argmax(np.asarray(logits[:n]), -1))
         return np.concatenate(out)
 
     def accuracy(self, samples: Sequence[wl.Sample],
@@ -218,6 +233,72 @@ class TaskClassifier(BucketPredictor):
 
     def label(self, s: wl.Sample) -> int:
         return s.task_id
+
+
+# -- router-facing d-hat plumbing (predictor in the routing loop) -----------
+
+def serviceable_decode(profile: HardwareProfile, d_hat: int,
+                       prompt_tokens: int) -> int:
+    """Clamp a decode estimate to the instance-serviceable KV budget
+    (vLLM-style max-tokens bound): a top-bucket upper edge can exceed
+    the whole pool, and an unserviceable d-hat would make the router's
+    capacity-fit check defer the request forever.  ONE definition,
+    shared by training-time annotation and the serving gateway, so the
+    router trains on exactly the signal it serves with."""
+    cap = int(profile.capacity_tokens * 0.95)
+    return max(min(int(d_hat), cap - prompt_tokens), 1)
+
+
+def annotate_requests(predictor: "BucketPredictor", requests,
+                      samples) -> None:
+    """Batch-predict decode buckets for ``samples`` (one padded jitted
+    forward per 512) and stamp the aligned ``requests`` with
+    ``predicted_bucket`` / ``predicted_decode`` -- the d-hat the state
+    featurizer, the impact estimator, and the backlog penalty consume
+    instead of the oracle length."""
+    if not requests:
+        return
+    buckets = predictor.predict(samples)
+    for r, b in zip(requests, buckets):
+        r.predicted_bucket = int(b)
+        r.predicted_decode = serviceable_decode(
+            predictor.profile, predictor.bucket_upper_tokens(int(b)),
+            r.prompt_tokens)
+
+
+def predicted_decode(req) -> int:
+    """``predict_decode`` hook reading the stamped d-hat (oracle
+    fallback for requests that never passed the predictor)."""
+    d = req.predicted_decode
+    return d if d is not None else req.decode_tokens
+
+
+def annotating_stream(scenario_fn, predictor: "BucketPredictor"):
+    """Wrap a scenario stream so every episode's requests are stamped
+    with predictor d-hats before training sees them: this is how
+    ``batched_rl.train_batched`` runs with the LEARNED length predictor
+    in the loop (pass ``predict_decode=predicted_decode`` alongside)."""
+    def fn(ep: int):
+        scn = scenario_fn(ep)
+        if scn.samples is not None:
+            annotate_requests(predictor, scn.requests, scn.samples)
+        return scn
+    return fn
+
+
+def quick_bucket_predictor(profile: HardwareProfile,
+                           n_train: int = 2000, epochs: int = 2,
+                           seed: int = 0,
+                           cfg: Optional[PredictorConfig] = None
+                           ) -> "BucketPredictor":
+    """Train a small bucket predictor on fresh synthetic samples --
+    the shared setup step for the gateway bench/launcher and the
+    predictor-in-the-loop trainer."""
+    cfg = cfg or PredictorConfig()
+    pred = BucketPredictor(cfg, profile, seed=seed)
+    pred.fit(wl.generate(n_train, seed=seed + 1), epochs=epochs,
+             seed=seed + 2)
+    return pred
 
 
 # -- §A.12 trace predictor (no prompt content) ------------------------------

@@ -92,6 +92,45 @@ class RouterConfig:
     seed: int = 0
 
 
+def mixing_scores(cluster, req: Request, d_hat: int,
+                  alpha: float = 0.5) -> np.ndarray:
+    """Per-instance r_mixing for routing ``req`` onto ``cluster`` now
+    (each instance judged by its own profile; failed instances -inf).
+    Shared by the RL env, the cluster manager, and the gateway's
+    policy layer -- one implementation of the paper's Eq. 1-2 scoring."""
+    sums = [inst.resident_token_sum() + inst.queued_prompt_sum()
+            for inst in cluster.instances]
+    scores = impact.mixing_heterogeneous(
+        [inst.profile for inst in cluster.instances],
+        req.prompt_tokens, d_hat, sums, alpha)
+    for i, inst in enumerate(cluster.instances):
+        if inst.failed:
+            scores[i] = -np.inf
+    return scores
+
+
+def guidance_from_scores(cluster, req: Request, d_hat: int,
+                         scores: np.ndarray,
+                         defer_prior_bias: float = -0.05) -> np.ndarray:
+    """Per-action r_mixing advantage for ``req`` given its per-instance
+    ``scores`` (route_i: scores_i - max; defer: min - max), with the
+    capacity-fit correction of §5.3 goal (c): placements that would
+    overflow the KV budget are penalized, and if nothing fits the defer
+    action is encouraged instead."""
+    out = np.zeros(cluster.m + 1, np.float32)
+    need = req.prompt_tokens + d_hat
+    fits = np.array([inst.free_tokens() >= need and not inst.failed
+                     for inst in cluster.instances])
+    scores = scores + np.where(fits, 0.0, -0.3)
+    finite = scores[np.isfinite(scores)]
+    top = finite.max() if finite.size else 0.0
+    out[:cluster.m] = np.where(np.isfinite(scores), scores - top, -1e9)
+    defer_bias = 0.2 - top if not fits.any() else defer_prior_bias
+    out[cluster.m] = ((finite.min() - top) if finite.size > 1
+                      else 0.0) + defer_bias
+    return out
+
+
 class RoutingEnv:
     """One router action per dt tick (the paper's 0.02 s cadence).
 
@@ -190,15 +229,7 @@ class RoutingEnv:
         if self._score_cache is not None and self._score_cache[0] == key:
             return self._score_cache[1]
         d_hat = max(self.predict_decode(req), 1)
-        # queued requests carry zero progress, so queue context == prompts
-        sums = [inst.resident_token_sum() + inst.queued_prompt_sum()
-                for inst in cluster.instances]
-        scores = impact.mixing_heterogeneous(
-            [inst.profile for inst in cluster.instances],
-            req.prompt_tokens, d_hat, sums, self.cfg.alpha)
-        for i, inst in enumerate(cluster.instances):
-            if inst.failed:
-                scores[i] = -np.inf
+        scores = mixing_scores(cluster, req, d_hat, self.cfg.alpha)
         self._score_cache = (key, scores)
         return scores
 
@@ -206,28 +237,13 @@ class RoutingEnv:
         """Per-action r_mixing advantage for the current head request
         (route_i: scores_i - max; defer: min - max), zeros if no request."""
         cluster = self.cluster
-        out = np.zeros(cluster.m + 1, np.float32)
         if not cluster.central:
-            return out
+            return np.zeros(cluster.m + 1, np.float32)
         req = cluster.central[0]
         d_hat = max(self.predict_decode(req), 1)
-        scores = self._scores(req)
-        # capacity-fit term (§5.3 reward design goal (c): prevent requests
-        # from queueing at instances for lack of memory): placements that
-        # would overflow the KV budget are penalized; if nothing fits,
-        # deferring is encouraged instead.
-        need = req.prompt_tokens + d_hat
-        fits = np.array([inst.free_tokens() >= need and not inst.failed
-                         for inst in cluster.instances])
-        scores = scores + np.where(fits, 0.0, -0.3)
-        finite = scores[np.isfinite(scores)]
-        top = finite.max() if finite.size else 0.0
-        out[:cluster.m] = np.where(np.isfinite(scores), scores - top, -1e9)
-        defer_bias = 0.2 - top if not fits.any() else \
-            self.cfg.defer_prior_bias
-        out[cluster.m] = ((finite.min() - top) if finite.size > 1
-                          else 0.0) + defer_bias
-        return out
+        return guidance_from_scores(cluster, req, d_hat,
+                                    self._scores(req),
+                                    self.cfg.defer_prior_bias)
 
     def _backlog_penalty(self) -> float:
         return self._T - self._S

@@ -200,7 +200,10 @@ PROFILE_POOL = (V100_LLAMA2_7B, A100_LLAMA31_8B)
 @dataclass
 class Scenario:
     """One training episode: a request stream plus the cluster shape it
-    runs on (per-instance hardware profiles -- mixed generations allowed)."""
+    runs on (per-instance hardware profiles -- mixed generations
+    allowed).  ``samples`` (when kept) aligns 1:1 with ``requests`` and
+    carries the synthetic prompt content the length predictor consumes
+    (oracle-free routing)."""
     requests: List[Request]
     profiles: Tuple[HardwareProfile, ...]
     name: str = "scenario"
@@ -208,6 +211,7 @@ class Scenario:
     rate: float = 0.0
     seed: int = 0
     meta: dict = field(default_factory=dict)
+    samples: Optional[List[Sample]] = None
 
     @property
     def m(self) -> int:
@@ -264,7 +268,67 @@ def make_scenario(seed: int,
     return Scenario(requests=reqs, profiles=profiles,
                     name=f"scn{seed}-{pattern}-m{m}", pattern=pattern,
                     rate=rate, seed=seed,
-                    meta={"tasks": tasks or TASKS, "speed": speed})
+                    meta={"tasks": tasks or TASKS, "speed": speed},
+                    samples=samples)
+
+
+# tenant -> (traffic share, task mix or None for the full mixture);
+# the default gateway mix: a latency-sensitive chat tenant, a heavy
+# summarization-style tenant, and a long-tail tenant on the full mixture
+DEFAULT_TENANTS = {
+    "chat": (0.45, ("qna", "translation")),
+    "batch": (0.30, ("sentiment", "in_context_qna")),
+    "misc": (0.25, None),
+}
+
+
+def make_tenant_scenario(seed: int,
+                         tenants: Optional[dict] = None,
+                         n_requests: int = 400,
+                         rate: float = 16.0,
+                         pattern: str = "bursty",
+                         profiles: Sequence[HardwareProfile] = (
+                             V100_LLAMA2_7B,) * 4,
+                         **arrival_kw) -> Scenario:
+    """Multi-tenant open-loop arrival stream for the serving gateway.
+
+    Each tenant gets a traffic share and its own task mix (Table-1 task
+    subsets -- tenants with different prompt/decode shapes are what make
+    per-tenant SLO breakdowns interesting); arrivals follow one shared
+    poisson/bursty/diurnal process.  Requests carry ``tenant`` labels
+    and the scenario keeps ``samples`` so the learned length predictor
+    (not the oracle) can sit in the routing loop."""
+    tenants = dict(tenants or DEFAULT_TENANTS)
+    profiles = tuple(profiles)
+    rng = np.random.default_rng(seed)
+    names = sorted(tenants)
+    w = np.array([tenants[t][0] for t in names], float)
+    w /= w.sum()
+    assign = rng.choice(len(names), size=n_requests, p=w)
+    # per-tenant sample pools drawn with that tenant's task mix
+    pools = {}
+    for k, t in enumerate(names):
+        count = int(np.sum(assign == k))
+        pools[t] = list(reversed(generate(
+            count, seed=seed + 101 * (k + 1), tasks=tenants[t][1])))
+    times = arrival_times(n_requests, rate, pattern, seed=seed + 3,
+                          **arrival_kw)
+    budget = int(min(p.capacity_tokens for p in profiles) * 0.95)
+    reqs: List[Request] = []
+    samples: List[Sample] = []
+    for k, at in zip(assign, times):
+        t = names[k]
+        s = pools[t].pop()
+        d = min(s.decode_tokens, max(budget - s.prompt_tokens, 1))
+        reqs.append(Request(prompt_tokens=s.prompt_tokens,
+                            decode_tokens=d, arrival=float(at),
+                            task=s.task, tenant=t))
+        samples.append(s)
+    return Scenario(requests=reqs, profiles=profiles,
+                    name=f"tenants{seed}-{pattern}", pattern=pattern,
+                    rate=rate, seed=seed,
+                    meta={"tenants": {t: tenants[t][0] for t in names}},
+                    samples=samples)
 
 
 def scenario_stream(base_seed: int = 0, **kw) -> Callable[[int], Scenario]:

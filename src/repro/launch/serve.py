@@ -1,10 +1,19 @@
 """Serving launcher: intelligent-router cluster over real (reduced) JAX
 instances or the calibrated simulator.
 
-  # simulator cluster (paper experiments scale)
+  # online gateway: open-loop multi-tenant stream, pluggable policy,
+  # learned length predictor in the loop, rolling SLO metrics
+  PYTHONPATH=src python -m repro.launch.serve --mode gateway \
+      --policy rl|mixing|jsq|rr --pattern bursty --queue-cap 64
+
+  # gateway over real tiny engines on CPU
+  PYTHONPATH=src python -m repro.launch.serve --mode gateway \
+      --backend engine --policy mixing --requests 12
+
+  # closed-loop simulator episode (legacy path)
   PYTHONPATH=src python -m repro.launch.serve --mode sim --requests 400
 
-  # real tiny engines on CPU
+  # real tiny engines, impact-heuristic routing (legacy path)
   PYTHONPATH=src python -m repro.launch.serve --mode engine --requests 12
 """
 from __future__ import annotations
@@ -17,27 +26,44 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.core import impact, rl_router as rl
+from repro.core import workload as wl
 from repro.core.cluster_manager import ManagedCluster, ManagedClusterConfig
+from repro.core.predictor import quick_bucket_predictor
 from repro.core.profiles import V100_LLAMA2_7B
 from repro.core.workload import generate, to_requests
 from repro.models import params as params_lib
 from repro.serving.engine import LLMInstance
+from repro.serving.gateway import (EngineClusterAdapter, Gateway,
+                                   GatewayConfig, MicroBatchPredictor)
+from repro.serving.metrics import format_snapshot
+from repro.serving.policies import (RLPolicy, make_gateway_policy,
+                                    restore_rl_policy)
 from repro.serving.request import Request, summarize
 from repro.serving.scheduler import get_scheduler
 
 
-def serve_sim(args):
-    cfg = rl.RouterConfig(variant="guided", n_instances=args.instances,
-                          q_arch="decomposed", seed=0,
-                          explore_episodes=max(args.train_episodes - 3, 1),
-                          scheduler=args.scheduler,
-                          chunked_prefill=args.chunked_prefill)
+def _router_cfg(args) -> rl.RouterConfig:
+    return rl.RouterConfig(variant="guided", n_instances=args.instances,
+                           q_arch="decomposed", seed=0,
+                           explore_episodes=max(args.train_episodes - 3,
+                                                1),
+                           scheduler=args.scheduler,
+                           chunked_prefill=args.chunked_prefill)
+
+
+def _train_quick_agent(args, cfg: rl.RouterConfig):
     out = rl.train(cfg, V100_LLAMA2_7B,
                    lambda ep: to_requests(generate(args.requests, seed=ep),
                                           rate=args.rate, seed=ep + 50),
                    n_episodes=args.train_episodes)
+    return out["agent"]
+
+
+def serve_sim(args):
+    cfg = _router_cfg(args)
+    agent = _train_quick_agent(args, cfg)
     mgr = ManagedCluster(ManagedClusterConfig(n_instances=args.instances),
-                         cfg, V100_LLAMA2_7B, out["agent"])
+                         cfg, V100_LLAMA2_7B, agent)
     reqs = to_requests(generate(args.requests, seed=991), rate=args.rate,
                        seed=992)
     stats = mgr.serve(reqs)
@@ -46,14 +72,74 @@ def serve_sim(args):
           f"preemptions={stats['preemptions']}")
 
 
-def serve_engine(args):
+def _tiny_engines(args, capacity: int = 400):
     cfg = get_config(args.arch).reduced()
-    prof = dataclasses.replace(V100_LLAMA2_7B, capacity_tokens=400)
+    prof = dataclasses.replace(V100_LLAMA2_7B, capacity_tokens=capacity)
     params = params_lib.init_params(jax.random.PRNGKey(0), cfg)
-    insts = [LLMInstance(cfg, params, prof,
-                         get_scheduler(args.scheduler), n_slots=4,
-                         cache_len=128, instance_id=i)
-             for i in range(args.instances)]
+    return [LLMInstance(cfg, params, prof,
+                        get_scheduler(args.scheduler), n_slots=4,
+                        cache_len=128, instance_id=i)
+            for i in range(args.instances)]
+
+
+def serve_gateway(args):
+    """Online gateway over the simulator (default) or real engines."""
+    cfg = _router_cfg(args)
+    gcfg = GatewayConfig(queue_cap=args.queue_cap, on_full=args.on_full,
+                         scheduler=args.scheduler,
+                         chunked_prefill=args.chunked_prefill)
+    if args.backend == "engine":
+        # tiny real engines: short random prompts, oracle-free routing
+        # via the mixing heuristic (no content for the predictor)
+        engines = _tiny_engines(args)
+        cluster = EngineClusterAdapter(engines)
+        policy_name = args.policy
+        if policy_name == "rl":
+            if args.checkpoint:
+                policy = restore_rl_policy(cfg, args.checkpoint,
+                                           m=args.instances)
+            else:
+                print("WARNING: --backend engine --policy rl needs "
+                      "--checkpoint (no simulator to train on); "
+                      "falling back to the mixing policy")
+                policy_name = "mixing"
+                policy = make_gateway_policy(policy_name, cfg)
+        else:
+            policy = make_gateway_policy(policy_name, cfg)
+        gw = Gateway(gcfg, None, policy, cluster=cluster)
+        rng = np.random.default_rng(0)
+        reqs = [Request(prompt_tokens=int(rng.integers(10, 80)),
+                        decode_tokens=int(rng.integers(5, 60)),
+                        arrival=float(i) * 0.05, tenant="engine")
+                for i in range(args.requests)]
+        stats = gw.run(reqs)
+    else:
+        profiles = (V100_LLAMA2_7B,) * args.instances
+        scn = wl.make_tenant_scenario(seed=7, n_requests=args.requests,
+                                      rate=args.rate,
+                                      pattern=args.pattern,
+                                      profiles=profiles)
+        length = MicroBatchPredictor(quick_bucket_predictor(
+            V100_LLAMA2_7B, n_train=2000, epochs=2))
+        if args.policy == "rl":
+            if args.checkpoint:
+                policy = restore_rl_policy(cfg, args.checkpoint,
+                                           m=args.instances)
+            else:
+                policy = RLPolicy(_train_quick_agent(args, cfg), cfg)
+        else:
+            policy = make_gateway_policy(args.policy, cfg)
+        gw = Gateway(gcfg, profiles, policy, length=length)
+        stats = gw.run(scn)
+    print(f"policy={stats['policy']} served n={stats['n']} "
+          f"admitted={stats['admitted']} shed={stats['shed']} "
+          f"preemptions={stats['preemptions']}")
+    print(format_snapshot(stats["snapshot"]))
+
+
+def serve_engine(args):
+    insts = _tiny_engines(args)
+    prof = insts[0].profile
     rng = np.random.default_rng(0)
     reqs = [Request(prompt_tokens=int(rng.integers(10, 80)),
                     decode_tokens=int(rng.integers(5, 60)))
@@ -75,7 +161,21 @@ def serve_engine(args):
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--mode", choices=("sim", "engine"), default="sim")
+    ap.add_argument("--mode", choices=("sim", "engine", "gateway"),
+                    default="sim")
+    ap.add_argument("--backend", choices=("sim", "engine"),
+                    default="sim", help="gateway cluster backend")
+    ap.add_argument("--policy", default="mixing",
+                    choices=("rl", "mixing", "jsq", "rr"),
+                    help="gateway routing policy")
+    ap.add_argument("--pattern", default="bursty",
+                    choices=("poisson", "bursty", "diurnal"))
+    ap.add_argument("--queue-cap", type=int, default=0,
+                    help="admission queue bound (0 = unbounded)")
+    ap.add_argument("--on-full", default="shed",
+                    choices=("shed", "defer"))
+    ap.add_argument("--checkpoint", default=None,
+                    help="router checkpoint dir for --policy rl")
     ap.add_argument("--arch", default="llama-2-7b")
     ap.add_argument("--instances", type=int, default=4)
     ap.add_argument("--requests", type=int, default=400)
@@ -86,6 +186,8 @@ def main():
     args = ap.parse_args()
     if args.mode == "sim":
         serve_sim(args)
+    elif args.mode == "gateway":
+        serve_gateway(args)
     else:
         serve_engine(args)
 

@@ -1,0 +1,371 @@
+"""Online serving gateway: streaming request router with pluggable
+policies, an in-loop length predictor, and rolling SLO metrics.
+
+The closed-loop entry point (``ManagedCluster.serve(reqs)``) consumes a
+pre-materialized request list; a production router is an *open-loop*
+service -- requests arrive continuously whether or not the cluster is
+keeping up, and each must be routed on arrival.  The gateway provides
+that loop as a first-class subsystem:
+
+  * an open-loop arrival stream (any ``workload.Scenario`` --
+    poisson/bursty/diurnal patterns, multi-tenant task mixes via
+    ``workload.make_tenant_scenario``) delivered by simulated wall
+    clock, with a bounded admission queue and backpressure: at
+    saturation new arrivals are **shed** (rejected, counted per tenant)
+    or **deferred** (held in a client-side overflow queue);
+  * one ``RoutingPolicy`` decision per tick (``serving.policies``: rr /
+    jsq / mixing / rl are one-line swaps), plus the SLA watchdog from
+    the RL env (a defer on a request that has waited past
+    ``defer_timeout`` is overridden with the best-impact placement);
+  * the learned length predictor in the hot path via
+    ``MicroBatchPredictor``: arrivals of each tick are predicted in ONE
+    padded jitted forward (micro-batching), LRU-cached per prompt
+    content, and stamped onto the request as d-hat -- no oracle decode
+    lengths anywhere in the routing path;
+  * ``serving.metrics.StreamMetrics``: windowed P50/P95/P99
+    TTFT/TBT/E2E, per-tenant breakdowns, SLO attainment, shed counters.
+
+With an unbounded queue, the oracle length service, and the RL policy,
+the gateway reproduces ``ManagedCluster.serve`` decision for decision
+(tests/test_gateway.py) -- the closed-loop path is a special case of
+this subsystem.
+
+The gateway fronts either the discrete-event simulator ``Cluster`` or
+real ``serving.engine.LLMInstance`` replicas (``EngineClusterAdapter``).
+"""
+from __future__ import annotations
+
+from collections import OrderedDict, deque
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core import predictor as pred_lib
+from repro.core import rl_router as rl
+from repro.core import workload as wl
+from repro.core.simulator import Cluster
+from repro.serving.metrics import SLO, StreamMetrics
+from repro.serving.request import Phase, Request, summarize
+
+
+# -- length services --------------------------------------------------------
+
+class OracleLength:
+    """Ground-truth decode lengths (parity tests / upper bound)."""
+    name = "oracle"
+
+    def prefetch(self, pairs: Sequence[Tuple[Request, object]]):
+        pass
+
+    def estimate(self, req: Request) -> int:
+        return req.decode_tokens
+
+
+class MicroBatchPredictor:
+    """The learned bucket predictor in the serving hot path.
+
+    ``prefetch`` runs once per arrival window (tick): every new arrival
+    whose prompt content is not LRU-cached is encoded and predicted in
+    one jitted forward padded to ``batch_pad`` rows -- so the predictor
+    costs one dispatch per window, not one per request, and the XLA
+    executable compiles exactly once.  Results are stamped on the
+    request (``predicted_bucket`` / ``predicted_decode``) and cached by
+    prompt content, so repeated prompts (retries, templated traffic)
+    skip the network entirely."""
+    name = "microbatch"
+
+    def __init__(self, predictor: pred_lib.BucketPredictor,
+                 batch_pad: int = 16, cache_size: int = 4096,
+                 default_bucket: int = 3):
+        self.predictor = predictor
+        self.batch_pad = batch_pad
+        self.cache_size = cache_size
+        self._cache: OrderedDict = OrderedDict()   # key -> (bucket, d_hat)
+        self.hits = 0
+        self.misses = 0
+        self.forwards = 0            # jitted dispatch count
+        self.default_d = max(
+            int(predictor.bucket_upper_tokens(default_bucket)), 1)
+
+    @staticmethod
+    def _key(sample) -> tuple:
+        return (sample.task_id, sample.token_ids.tobytes())
+
+    def _stamp(self, req: Request, bucket: int, d_hat: int):
+        req.predicted_bucket = bucket
+        req.predicted_decode = pred_lib.serviceable_decode(
+            self.predictor.profile, d_hat, req.prompt_tokens)
+
+    def prefetch(self, pairs: Sequence[Tuple[Request, object]]):
+        todo: List[Tuple[tuple, Request, object]] = []
+        for req, sample in pairs:
+            if sample is None:
+                continue
+            key = self._key(sample)
+            hit = self._cache.get(key)
+            if hit is not None:
+                self.hits += 1
+                self._cache.move_to_end(key)
+                self._stamp(req, *hit)
+            else:
+                self.misses += 1
+                todo.append((key, req, sample))
+        if not todo:
+            return
+        # one padded jitted forward per batch_pad window (predict()
+        # owns the pad/chunk/compile-once logic)
+        buckets = self.predictor.predict([s for _, _, s in todo],
+                                         chunk=self.batch_pad)
+        self.forwards += -(-len(todo) // self.batch_pad)
+        for (key, req, _), b in zip(todo, buckets):
+            d_hat = max(int(self.predictor.bucket_upper_tokens(int(b))),
+                        1)
+            self._cache[key] = (int(b), d_hat)
+            self._stamp(req, int(b), d_hat)
+            while len(self._cache) > self.cache_size:
+                self._cache.popitem(last=False)
+
+    def estimate(self, req: Request) -> int:
+        if req.predicted_decode is not None:
+            return req.predicted_decode
+        return self.default_d
+
+
+# -- real-engine backend ----------------------------------------------------
+
+class _EngineInstanceView:
+    """Adapt one ``LLMInstance`` to the simulator-instance surface the
+    policies and the state featurizer read."""
+
+    def __init__(self, engine):
+        self.engine = engine
+
+    @property
+    def profile(self):
+        return self.engine.profile
+
+    @property
+    def failed(self):
+        return self.engine.failed
+
+    @property
+    def residents(self):
+        return self.engine.resident
+
+    @property
+    def queue(self):
+        return self.engine.queue
+
+    @property
+    def n_slots(self):
+        return self.engine.n_slots
+
+    @property
+    def clock(self):
+        return self.engine.clock
+
+    def resident_token_sum(self) -> float:
+        return self.engine.resident_tokens()
+
+    def queued_prompt_sum(self) -> float:
+        return sum(r.prompt_tokens for r in self.engine.queue)
+
+    def free_tokens(self) -> float:
+        return self.engine.free_tokens()
+
+    def outstanding_tokens(self) -> float:
+        todo = 0.0
+        for r in self.engine.resident:
+            todo += (r.prompt_tokens - r.prefilled) + max(
+                r.decode_tokens - r.decoded, 0)
+        for r in self.engine.queue:
+            todo += r.prompt_tokens + r.decode_tokens
+        return todo
+
+
+class EngineClusterAdapter:
+    """Drive real JAX ``LLMInstance`` replicas behind the gateway with
+    the ``Cluster`` protocol (central queue, route, dt-advance).  Each
+    engine runs its virtual clock up to the gateway tick; idle engines
+    are fast-forwarded without burning iterations."""
+
+    def __init__(self, engines, dt: float = 0.02):
+        self.engines = list(engines)
+        self.instances = [_EngineInstanceView(e) for e in self.engines]
+        self.profile = self.engines[0].profile
+        self.profiles = tuple(e.profile for e in self.engines)
+        self.dt = dt
+        self.central: deque = deque()
+        self.t = 0.0
+        self.completed: List[Request] = []
+        self.queue_len_trace: List[int] = []
+
+    @property
+    def m(self) -> int:
+        return len(self.engines)
+
+    def alive(self) -> List[int]:
+        return [i for i, e in enumerate(self.engines) if not e.failed]
+
+    def enqueue(self, req: Request):
+        req.phase = Phase.QUEUED
+        self.central.append(req)
+
+    def route(self, idx: int) -> Request:
+        req = self.central.popleft()
+        self.engines[idx].submit(req)
+        return req
+
+    def advance(self) -> List[Request]:
+        self.t += self.dt
+        done: List[Request] = []
+        for e in self.engines:
+            if e.failed:
+                e.clock = self.t
+                continue
+            while e.clock < self.t:
+                if not e.queue and not any(
+                        s is not None for s in e.slots):
+                    e.clock = self.t
+                    break
+                done.extend(e.step())
+        self.completed.extend(done)
+        self.queue_len_trace.append(len(self.central))
+        return done
+
+
+# -- the gateway ------------------------------------------------------------
+
+@dataclass
+class GatewayConfig:
+    dt: float = 0.02                 # the paper's router cadence
+    queue_cap: int = 0               # admission queue bound; 0 = unbounded
+    on_full: str = "shed"            # "shed" | "defer" at saturation
+    routes_per_tick: int = 1
+    defer_timeout: float = 5.0       # SLA watchdog (RouterConfig parity)
+    alpha: float = 0.5               # Eq.(1)/(2) balance for the watchdog
+    scheduler: str = "fcfs"
+    chunked_prefill: int = 0
+    n_slots: Optional[int] = None
+    max_time: float = 36_000.0
+    metrics_window: float = 300.0
+    quantiles: Tuple[float, ...] = (0.5, 0.95, 0.99)
+    slo: SLO = field(default_factory=SLO)
+
+
+class Gateway:
+    """Event-driven serving gateway over a cluster backend."""
+
+    def __init__(self, cfg: GatewayConfig, profiles, policy,
+                 length=None, cluster=None):
+        self.cfg = cfg
+        if cluster is not None:
+            self.cluster = cluster
+        else:
+            profiles = tuple(profiles)
+            self.cluster = Cluster(profiles, len(profiles),
+                                   cfg.scheduler, cfg.dt,
+                                   cfg.chunked_prefill, cfg.n_slots)
+        self.policy = policy
+        self.length = length or OracleLength()
+        self.metrics = StreamMetrics(window=cfg.metrics_window,
+                                     quantiles=cfg.quantiles,
+                                     slo=cfg.slo)
+        self.shed: List[Request] = []
+        self._overflow: deque = deque()
+        self._n_admitted = 0
+
+    # -- admission / backpressure --------------------------------------
+    def _queue_full(self) -> bool:
+        cap = self.cfg.queue_cap
+        return bool(cap) and len(self.cluster.central) >= cap
+
+    def _admit(self, req: Request):
+        if self._queue_full():
+            if self.cfg.on_full == "shed":
+                req.phase = Phase.SHED
+                self.shed.append(req)
+                self.metrics.on_shed(req.tenant)
+            else:                       # defer: client-side overflow
+                self._overflow.append(req)
+            return
+        self.cluster.enqueue(req)
+        self._n_admitted += 1
+        self.metrics.on_admit(req.tenant)
+
+    def _drain_overflow(self):
+        while self._overflow and not self._queue_full():
+            req = self._overflow.popleft()
+            self.cluster.enqueue(req)
+            self._n_admitted += 1
+            self.metrics.on_admit(req.tenant)
+
+    # -- routing -------------------------------------------------------
+    def _route_some(self):
+        cfg = self.cfg
+        cluster = self.cluster
+        for _ in range(cfg.routes_per_tick):
+            if not cluster.central:
+                return
+            head = cluster.central[0]
+            d_hat = max(int(self.length.estimate(head)), 1)
+            a = self.policy.route(cluster, head, d_hat)
+            deferred = a is None or a >= cluster.m
+            if deferred and cluster.t - head.arrival > cfg.defer_timeout:
+                # SLA watchdog: force the best-impact placement (the
+                # same override RoutingEnv.step applies)
+                scores = rl.mixing_scores(cluster, head, d_hat,
+                                          cfg.alpha)
+                a = int(np.argmax(scores))
+                deferred = False
+            if deferred:
+                return
+            cluster.route(a)
+
+    # -- serving loop --------------------------------------------------
+    def run(self, scenario_or_requests, samples=None) -> Dict:
+        """Serve one open-loop stream to completion (or ``max_time``).
+
+        Accepts a ``workload.Scenario`` (its ``samples`` feed the
+        length service) or a plain request list.  Returns closed-loop
+        summary stats + the streaming ``snapshot``."""
+        if isinstance(scenario_or_requests, wl.Scenario):
+            requests = scenario_or_requests.requests
+            samples = scenario_or_requests.samples
+        else:
+            requests = list(scenario_or_requests)
+        if samples is None:
+            samples = [None] * len(requests)
+        order = sorted(range(len(requests)),
+                       key=lambda i: requests[i].arrival)
+        stream = [(requests[i], samples[i]) for i in order]
+        cluster = self.cluster
+        cfg = self.cfg
+        i, n = 0, len(stream)
+        while True:
+            new: List[Tuple[Request, object]] = []
+            while i < n and stream[i][0].arrival <= cluster.t:
+                new.append(stream[i])
+                i += 1
+            if new:
+                self.length.prefetch(new)
+            self._drain_overflow()      # deferred clients retry first
+            for req, _ in new:
+                self._admit(req)
+            self._route_some()
+            for r in cluster.advance():
+                self.metrics.on_complete(r, r.tenant)
+            self._drain_overflow()
+            if (i >= n and not self._overflow
+                    and len(cluster.completed) >= self._n_admitted):
+                break
+            if cluster.t > cfg.max_time:
+                break
+        stats = summarize(requests)
+        stats["preemptions"] = sum(r.preemptions for r in requests)
+        stats["shed"] = len(self.shed)
+        stats["admitted"] = self._n_admitted
+        stats["policy"] = getattr(self.policy, "name", "?")
+        stats["snapshot"] = self.metrics.snapshot(cluster.t)
+        return stats

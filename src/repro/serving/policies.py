@@ -1,0 +1,184 @@
+"""Pluggable routing policies for the serving gateway.
+
+One ``RoutingPolicy`` protocol unifies the repo's previously scattered
+routing paths -- the heuristic baselines in ``core.policies`` (driven
+through ``simulator.run_heuristic``), the r_mixing heuristic embedded in
+``RoutingEnv.guidance_bonus``, and the trained RL agent driven by
+``ManagedCluster.serve`` -- so any of them is a one-line swap in the
+gateway / ``launch.serve``:
+
+    route(cluster, req, d_hat) -> Optional[int]
+
+returns an instance index, or ``None`` / ``>= cluster.m`` to defer the
+head-of-queue request.  ``d_hat`` is the gateway's decode-length
+estimate (the micro-batched learned predictor in production, the oracle
+in parity tests); policies never read ``req.decode_tokens`` directly.
+"""
+from __future__ import annotations
+
+from typing import Optional, Protocol, runtime_checkable
+
+import numpy as np
+
+from repro.core import policies as legacy, rl_router as rl
+from repro.core import state as state_lib
+
+
+@runtime_checkable
+class RoutingPolicy(Protocol):
+    name: str
+
+    def route(self, cluster, req, d_hat: int) -> Optional[int]:
+        ...
+
+
+class RoundRobinPolicy:
+    """Alternate over alive instances (the paper's primary baseline)."""
+    name = "rr"
+
+    def __init__(self):
+        self._next = 0
+
+    def route(self, cluster, req, d_hat: int) -> Optional[int]:
+        alive = cluster.alive()
+        if not alive:
+            return None
+        idx = alive[self._next % len(alive)]
+        self._next += 1
+        return idx
+
+
+class LeastOutstandingWork:
+    """JSQ on estimated outstanding tokens.  Unlike the legacy oracle
+    JSQ (§A.2.1) the queue-side estimate uses d_hat bookkeeping per
+    routed request, so it works with a learned predictor."""
+    name = "jsq"
+
+    def __init__(self):
+        self._est: dict = {}           # rid -> d_hat at routing time
+
+    def route(self, cluster, req, d_hat: int) -> Optional[int]:
+        alive = cluster.alive()
+        if not alive:
+            return None
+        loads = []
+        for i in alive:
+            inst = cluster.instances[i]
+            todo = 0.0
+            for r in inst.residents:
+                todo += (r.prompt_tokens - r.prefilled) + max(
+                    self._est.get(r.rid, r.decode_tokens) - r.decoded, 0)
+            for r in inst.queue:
+                todo += r.prompt_tokens + self._est.get(r.rid,
+                                                        r.decode_tokens)
+            loads.append(todo)
+        pick = alive[int(np.argmin(loads))]
+        self._est[req.rid] = d_hat
+        return pick
+
+
+class MixingImpactPolicy:
+    """The paper's workload-impact heuristic (Eq. 1-2) with the
+    capacity-fit defer correction -- exactly the prior that guides the
+    RL router, served standalone."""
+    name = "mixing"
+
+    def __init__(self, alpha: float = 0.5,
+                 defer_prior_bias: float = -0.05):
+        self.alpha = alpha
+        self.defer_prior_bias = defer_prior_bias
+
+    def route(self, cluster, req, d_hat: int) -> Optional[int]:
+        if not cluster.alive():
+            return None
+        scores = rl.mixing_scores(cluster, req, d_hat, self.alpha)
+        bonus = rl.guidance_from_scores(cluster, req, d_hat, scores,
+                                        self.defer_prior_bias)
+        a = int(np.argmax(bonus))
+        return a if a < cluster.m else None
+
+
+class RLPolicy:
+    """A trained DQN router behind the gateway.  Decision math is
+    identical to ``ManagedCluster.serve`` (greedy masked Q + guidance
+    prior, decomposed-arch aware), so a gateway with the oracle
+    predictor reproduces the closed-loop path decision for decision
+    (tests/test_gateway.py::test_policy_parity_with_managed_cluster)."""
+    name = "rl"
+
+    def __init__(self, agent, router_cfg: rl.RouterConfig):
+        self.agent = agent
+        self.cfg = router_cfg
+
+    def route(self, cluster, req, d_hat: int) -> Optional[int]:
+        cfg = self.cfg
+        mask = state_lib.action_mask(cluster)
+        w_sel = cfg.guidance_floor if cfg.variant == "guided" else 0.0
+        scores = rl.mixing_scores(cluster, req, d_hat, cfg.alpha)
+        bonus = rl.guidance_from_scores(cluster, req, d_hat, scores,
+                                        cfg.defer_prior_bias)
+        if (self.agent.cfg.q_arch == "decomposed"
+                or cluster.m + 1 == self.agent.cfg.n_actions):
+            s = state_lib.featurize(
+                cluster, cluster.profile, n_buckets=cfg.n_buckets,
+                include_impact=cfg.include_impact_features,
+                predict_decode=lambda r: d_hat, alpha=cfg.alpha)
+            prior = w_sel * bonus if w_sel else None
+            return int(self.agent.act(
+                s, mask, epsilon=0.0, prior=prior,
+                q_squash=cfg.q_squash if w_sel else 0.0))
+        # fixed-m MLP cannot score a resized cluster: fall back to the
+        # guidance heuristic (same degradation as ManagedCluster)
+        bonus[~mask] = -np.inf
+        return int(np.argmax(bonus))
+
+
+class LegacyPolicyAdapter:
+    """Wrap a ``core.policies`` heuristic (oracle decode lengths) into
+    the gateway protocol -- for baseline comparisons only."""
+
+    def __init__(self, policy):
+        self.policy = policy
+        self.name = f"legacy:{policy.name}"
+
+    def route(self, cluster, req, d_hat: int) -> Optional[int]:
+        return self.policy.act(cluster)
+
+
+def restore_rl_policy(router_cfg: rl.RouterConfig, checkpoint_dir: str,
+                      m: Optional[int] = None) -> RLPolicy:
+    """Rebuild the agent for an m-wide action space and restore its
+    weights from a ``training.checkpoint`` directory (the artifact
+    ``ManagedCluster.save_router`` / the trainers write)."""
+    from repro.training.checkpoint import CheckpointManager
+    agent = rl.make_agent(router_cfg, m=m)
+    out = CheckpointManager(checkpoint_dir).restore(agent.state_dict())
+    if out is None:
+        raise FileNotFoundError(
+            f"no router checkpoint under {checkpoint_dir}")
+    agent.load_state_dict(out[0])
+    return RLPolicy(agent, router_cfg)
+
+
+def make_gateway_policy(name: str, router_cfg: Optional[rl.RouterConfig]
+                        = None, agent=None, profile=None,
+                        checkpoint_dir: Optional[str] = None,
+                        m: Optional[int] = None):
+    """Policy factory: ``rr`` | ``jsq`` | ``mixing`` | ``rl`` (needs an
+    ``agent`` or ``checkpoint_dir``), or any ``core.policies`` name
+    (oracle-length legacy baselines, adapter-wrapped)."""
+    cfg = router_cfg or rl.RouterConfig()
+    if name in ("rr", "round_robin"):
+        return RoundRobinPolicy()
+    if name == "jsq":
+        return LeastOutstandingWork()
+    if name == "mixing":
+        return MixingImpactPolicy(alpha=cfg.alpha,
+                                  defer_prior_bias=cfg.defer_prior_bias)
+    if name == "rl":
+        if agent is not None:
+            return RLPolicy(agent, cfg)
+        if checkpoint_dir is not None:
+            return restore_rl_policy(cfg, checkpoint_dir, m=m)
+        raise ValueError("policy 'rl' needs agent= or checkpoint_dir=")
+    return LegacyPolicyAdapter(legacy.make_policy(name, profile))

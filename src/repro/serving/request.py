@@ -15,6 +15,7 @@ class Phase(enum.Enum):
     DECODE = "decode"
     PREEMPTED = "preempted"
     DONE = "done"
+    SHED = "shed"              # rejected at the gateway (backpressure)
 
 
 _ids = itertools.count()
@@ -28,6 +29,8 @@ class Request:
     task: str = "unknown"               # sentiment/entity/qna/... (Table 1)
     rid: int = field(default_factory=lambda: next(_ids))
     predicted_bucket: Optional[int] = None   # router's length prediction
+    predicted_decode: Optional[int] = None   # d-hat tokens (predictor)
+    tenant: str = "default"                  # gateway multi-tenant label
     tokens: Optional[list] = None            # real token ids (engine path)
 
     # lifecycle (filled by engine/simulator)

@@ -74,6 +74,7 @@ def init_train_state(key, cfg: ModelConfig, data_shards: int = 0):
 def train_router(router_cfg, scenario_fn, n_episodes: int,
                  batched: bool = True, batch_cfg=None, agent=None,
                  predict_decode: Optional[Callable] = None,
+                 length_predictor=None,
                  valid_fn: Optional[Callable] = None,
                  verbose: bool = False) -> Dict[str, Any]:
     """Unified entrypoint for training the routing policy (the system's
@@ -84,8 +85,33 @@ def train_router(router_cfg, scenario_fn, n_episodes: int,
     (`core.batched_rl.train_batched`); ``batched=False`` falls back to
     the sequential paper-faithful loop, which requires every scenario to
     be homogeneous (one hardware profile, cfg.n_instances wide).
+
+    ``length_predictor`` (a `core.predictor.BucketPredictor`) puts the
+    LEARNED length estimate in the training loop: each scenario's
+    requests are stamped with predictor d-hats (one batched jitted
+    forward per episode) and the env's ``predict_decode`` reads the
+    stamp -- the router trains on the same imperfect signal it serves
+    with, instead of the oracle decode length.
     """
     from repro.core import batched_rl, rl_router
+
+    if length_predictor is not None:
+        from repro.core import predictor as pred_lib
+        if predict_decode is not None:
+            raise ValueError(
+                "pass either predict_decode or length_predictor")
+        scenario_fn = pred_lib.annotating_stream(scenario_fn,
+                                                 length_predictor)
+        predict_decode = pred_lib.predicted_decode
+        if valid_fn is not None:
+            inner_valid = valid_fn
+
+            def valid_fn():
+                scn = inner_valid()
+                if scn.samples is not None:
+                    pred_lib.annotate_requests(length_predictor,
+                                               scn.requests, scn.samples)
+                return scn
 
     if batched:
         return batched_rl.train_batched(
