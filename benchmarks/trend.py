@@ -88,7 +88,10 @@ def compare(current: dict, baseline: dict, tol: float = 0.35,
     Fraction-scale metrics (baseline in [0, 1]: accuracies, SLO/shed
     rates) are gated at the tighter ``frac_tol`` band -- a generic
     relative ``tol`` wide enough for latency jitter would let an
-    accuracy collapse to half its value pass silently."""
+    accuracy collapse to half its value pass silently.  ``speedup``
+    metrics are wall-clock RATIOS, not fractions: they may
+    legitimately sit below 1.0 and carry runner noise, so they always
+    take the generous ``tol`` band."""
     regressions: List[str] = []
     notes: List[str] = []
     cur_b, cur_r = _index(current)
@@ -121,7 +124,10 @@ def compare(current: dict, baseline: dict, tol: float = 0.35,
                 continue
             cur_v = cur_m[metric]
             delta = cur_v - base_v
-            if 0.0 <= base_v <= 1.0:
+            is_ratio = (metric if metric != "_value"
+                        else key.rsplit("/", 1)[-1]).lower() \
+                .startswith("speedup")
+            if 0.0 <= base_v <= 1.0 and not is_ratio:
                 band = frac_tol * max(base_v, 0.05)
             else:
                 band = max(tol * abs(base_v), abs_floor * tol)

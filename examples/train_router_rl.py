@@ -9,9 +9,11 @@ diurnal arrivals) instead of the fixed paper setup.
 
 --predictor trains a decode-bucket predictor first and routes on its
 d-hat during RL training (no oracle decode lengths in the loop).
+--vec steps all episodes on the vectorized structure-of-arrays
+simulator (one fused pool; identical decisions to the Python stepper).
 
   PYTHONPATH=src python examples/train_router_rl.py [n_episodes]
-      [--sequential] [--hetero] [--predictor]
+      [--sequential] [--hetero] [--predictor] [--vec]
 """
 import os
 import sys
@@ -52,6 +54,7 @@ if __name__ == "__main__":
     sequential = "--sequential" in sys.argv
     hetero = "--hetero" in sys.argv
     use_predictor = "--predictor" in sys.argv
+    backend = "vec" if "--vec" in sys.argv else "py"
     for name in ("round_robin", "jsq", "impact_greedy"):
         st = run_heuristic(Cluster(PROF, M), reqs(991),
                            make_policy(name, PROF))
@@ -62,10 +65,10 @@ if __name__ == "__main__":
                           q_arch="decomposed", seed=0)
     if hetero:
         scen_fn = scenario_stream(0, n_requests=N)
-        bcfg = batched_rl.BatchedRLConfig(m_max=6)
+        bcfg = batched_rl.BatchedRLConfig(m_max=6, sim_backend=backend)
     else:
         scen_fn = lambda ep: scen(100 + ep, f"paper-{ep}")  # noqa: E731
-        bcfg = batched_rl.BatchedRLConfig(m_max=M)
+        bcfg = batched_rl.BatchedRLConfig(m_max=M, sim_backend=backend)
     predictor = None
     if use_predictor:
         from repro.core.predictor import quick_bucket_predictor
@@ -78,7 +81,7 @@ if __name__ == "__main__":
         valid_fn=lambda: scen(555, "valid"),
         verbose=True)
     dt = time.time() - t0
-    mode = "sequential" if sequential else "batched"
+    mode = "sequential" if sequential else f"batched/{backend}"
     print(f"[{mode}] {episodes} episodes in {dt:.1f}s "
           f"({episodes / dt:.2f} eps/s)")
     st = batched_rl.evaluate_scenarios(

@@ -66,6 +66,12 @@ class BatchedRLConfig:
     # IS-weight correction (the packed-row weight column).  Uniform
     # sampling (False) remains the validated default.
     prioritized: bool = False
+    # simulator backend: "py" steps each episode's SimInstances in
+    # Python; "vec" packs ALL episodes' instances into one shared
+    # vecsim pool and advances every instance of every episode in
+    # fused vector rounds (decision-for-decision identical; see
+    # core.vecsim).  benchmarks/bench_batched_rl.py gates the speedup.
+    sim_backend: str = "py"
 
 
 class _Slot:
@@ -73,15 +79,18 @@ class _Slot:
 
     __slots__ = ("env", "ep", "scenario", "w_k", "w_sel", "eps", "window",
                  "rew", "s", "s_pad", "mask_pad", "reward", "ticks",
-                 "done")
+                 "done", "pool_ep")
 
     def __init__(self, cfg: rl.RouterConfig, scenario: Scenario, ep: int,
-                 m_max: int, predict_decode, explore: bool):
+                 m_max: int, predict_decode, explore: bool,
+                 pool=None, pool_ep: int = 0):
         if scenario.m > m_max:
             raise ValueError(
                 f"scenario {scenario.name} has m={scenario.m} > "
                 f"m_max={m_max}; raise BatchedRLConfig.m_max")
-        self.env = rl.RoutingEnv(cfg, scenario.profiles, predict_decode)
+        self.pool_ep = pool_ep
+        self.env = rl.RoutingEnv(cfg, scenario.profiles, predict_decode,
+                                 pool=pool, pool_ep=pool_ep)
         self.ep = ep
         self.scenario = scenario
         self.w_k = rl.guidance_weight(cfg, ep)
@@ -163,6 +172,51 @@ def _flush_one(agent, slot: _Slot, gp: np.ndarray, nstep: int):
     agent.observe(s0, a0, ret, slot.s_pad, 1.0, slot.mask_pad)
 
 
+def _step_fused(slots: List[_Slot], actions: List[int], pool,
+                cfg: rl.RouterConfig):
+    """One decision on every live episode with FUSED simulator
+    stepping: apply each episode's action, then advance all episodes'
+    instances together in shared vecsim rounds until every episode
+    reaches its next decision point (non-empty router queue) or ends.
+    Reward semantics are identical to per-slot ``RoutingEnv.step``
+    (same ticks, same per-tick accrual); only the wall-clock cost
+    changes -- O(rounds) instead of O(episodes x instances)."""
+    n = len(slots)
+    shaping = cfg.potential_shaping
+    phi0 = ([sl.env._backlog_penalty() for sl in slots] if shaping
+            else None)
+    rewards = [sl.env._apply_action(actions[i], guide_w=sl.w_k)
+               for i, sl in enumerate(slots)]
+    dones = [False] * n
+    pending = list(range(n))
+    while pending:
+        # each episode advances to its next possible decision point
+        # (its next arrival) -- or a bounded drain window -- in ONE
+        # pool call, so lanes at staggered iteration phases coincide
+        # in the same fused rounds
+        spans = {i: (slots[i].env.cluster.ep,
+                     slots[i].env._span_bounds()) for i in pending}
+        out = pool.advance_span(list(spans.values()))
+        nxt = []
+        for i in pending:
+            env = slots[i].env
+            ep, bounds = spans[i]
+            gids, bk_rew = out[ep]
+            done_now = env.cluster.collect_span(gids, len(bounds))
+            delta, done = env._after_span(done_now, bk_rew)
+            rewards[i] += delta
+            if done:
+                dones[i] = True
+            elif not env.cluster.central:
+                nxt.append(i)
+        pending = nxt
+    if shaping:
+        for i, sl in enumerate(slots):
+            rewards[i] += (cfg.gamma * sl.env._backlog_penalty()
+                           - phi0[i])
+    return rewards, dones
+
+
 def train_batched(cfg: rl.RouterConfig,
                   scenario_fn: Callable[[int], Scenario],
                   n_episodes: int,
@@ -196,10 +250,15 @@ def train_batched(cfg: rl.RouterConfig,
     history: List[Dict] = []
     best = None
     started = 0
+    pool = None
+    if bcfg.sim_backend == "vec":
+        from repro.core.vecsim import VecSimPool
+        pool = VecSimPool(min(bcfg.n_envs, n_episodes))
     slots: List[_Slot] = []
     while started < min(bcfg.n_envs, n_episodes):
         slots.append(_Slot(cfg, scenario_fn(started), started, m_max,
-                           predict_decode, explore=True))
+                           predict_decode, explore=True,
+                           pool=pool, pool_ep=started))
         started += 1
     round_i = 0
     since_valid = 0
@@ -229,11 +288,26 @@ def train_batched(cfg: rl.RouterConfig,
             for _ in range(bcfg.updates_per_learn):
                 agent.learn(sync=bcfg.sync_learn)
         finished: List[_Slot] = []
+        if pool is not None:
+            fused_r, fused_done = _step_fused(
+                slots, [sl.unpad_action(int(acts[i]), m_max)
+                        for i, sl in enumerate(slots)], pool, cfg)
+            fused_s2 = state_lib.featurize_vec_many(
+                [sl.env.cluster for sl in slots],
+                [sl.env.profile for sl in slots],
+                [sl.env.predict_decode for sl in slots],
+                n_buckets=cfg.n_buckets,
+                include_impact=cfg.include_impact_features,
+                alpha=cfg.alpha)
         for i, sl in enumerate(slots):
             a_pad = int(acts[i])
             s_prev_pad = sl.s_pad
-            s2, r, done, _ = sl.env.step(sl.unpad_action(a_pad, m_max),
-                                         guide_w=sl.w_k)
+            if pool is not None:
+                r, done = fused_r[i], fused_done[i]
+                s2 = fused_s2[i]
+            else:
+                s2, r, done, _ = sl.env.step(
+                    sl.unpad_action(a_pad, m_max), guide_w=sl.w_k)
             sl._set_state(s2, m_max, cfg.include_impact_features)
             if cfg.nstep > 0:
                 sl.window.append((s_prev_pad, a_pad, len(sl.rew)))
@@ -251,6 +325,8 @@ def train_batched(cfg: rl.RouterConfig,
         for sl in finished:
             while sl.window:
                 _flush_one(agent, sl, gp, cfg.nstep)
+            if pool is not None:
+                sl.env.cluster.sync_all()     # max_time stragglers
             stats = summarize(sl.scenario.requests)
             stats.update({"episode": sl.ep, "reward": sl.reward,
                           "ticks": sl.ticks, "epsilon": sl.eps,
@@ -275,8 +351,11 @@ def train_batched(cfg: rl.RouterConfig,
                       f"e2e={stats.get('e2e_mean', float('nan')):.2f}")
             idx = slots.index(sl)
             if started < n_episodes:
+                # a replacement episode reuses the finished slot's pool
+                # episode (its lanes are reconfigured for the new shape)
                 slots[idx] = _Slot(cfg, scenario_fn(started), started,
-                                   m_max, predict_decode, explore=True)
+                                   m_max, predict_decode, explore=True,
+                                   pool=pool, pool_ep=sl.pool_ep)
                 started += 1
             else:
                 slots.pop(idx)
@@ -290,15 +369,22 @@ def train_batched(cfg: rl.RouterConfig,
 def evaluate_scenarios(cfg: rl.RouterConfig, agent,
                        scenarios: Sequence[Scenario],
                        predict_decode: Optional[Callable] = None,
-                       m_max: Optional[int] = None) -> List[Dict]:
+                       m_max: Optional[int] = None,
+                       sim_backend: str = "py") -> List[Dict]:
     """Greedy (epsilon=0, no learning) batched evaluation; one stats dict
     per scenario, same fields as `rl_router.evaluate`.  With a single
     homogeneous scenario of width cfg.n_instances this reproduces the
-    sequential evaluate decision for decision."""
+    sequential evaluate decision for decision (on either simulator
+    backend)."""
     m_max = m_max or max([cfg.n_instances] + [s.m for s in scenarios])
+    pool = None
+    if sim_backend == "vec":
+        from repro.core.vecsim import VecSimPool
+        pool = VecSimPool(len(scenarios))
     slots = [_Slot(cfg, s, ep=0, m_max=m_max,
-                   predict_decode=predict_decode, explore=False)
-             for s in scenarios]
+                   predict_decode=predict_decode, explore=False,
+                   pool=pool, pool_ep=i)
+             for i, s in enumerate(scenarios)]
     for sl in slots:
         sl.w_sel = cfg.guidance_floor if cfg.variant == "guided" else 0.0
     live = [sl for sl in slots if not sl.done]
@@ -313,6 +399,8 @@ def evaluate_scenarios(cfg: rl.RouterConfig, agent,
         live = [sl for sl in live if not sl.done]
     out = []
     for sl in slots:
+        if getattr(sl.env.cluster, "is_vec", False):
+            sl.env.cluster.sync_all()     # truncated-run stragglers
         stats = summarize(sl.scenario.requests)
         stats["spikes"] = sum(len(i.spikes)
                               for i in sl.env.cluster.instances)

@@ -61,6 +61,20 @@ def mixing_per_instance(profile: HardwareProfile, p_i: int, d_i: int,
                      for s in resident_token_sums])
 
 
+def mixing_vec(grad1, grad2, eps, p_i, d_i, s,
+               alpha: float = 0.5) -> np.ndarray:
+    """Vectorized ``r_mixing`` over per-lane calibration arrays
+    (grad1/grad2/epsilon) -- the single implementation behind the
+    vecsim fast paths in ``rl_router.mixing_scores`` and
+    ``state.featurize_vec_many``.  Mirrors the scalar functions'
+    association order on exact-integer token sums, so the produced
+    floats are bit-identical to a per-instance ``r_mixing`` loop."""
+    t_p = grad1 * (p_i ** 2 + s)
+    r_p = np.where(t_p <= eps, 1.0, 1.0 - t_p / eps)
+    r_d = -grad2 * (s + p_i + d_i)
+    return alpha * r_p + (1 - alpha) * r_d
+
+
 def mixing_heterogeneous(profiles: Sequence[HardwareProfile], p_i: int,
                          d_i: int, resident_token_sums: Sequence[float],
                          alpha: float = 0.5) -> np.ndarray:

@@ -13,6 +13,7 @@ calibrate from engine measurements (same linear-fit procedure as Fig. 4).
 """
 from __future__ import annotations
 
+import functools
 from dataclasses import dataclass, replace
 from typing import Sequence, Tuple
 
@@ -62,14 +63,23 @@ class HardwareProfile:
     # -- decode-bucket edges (§5.1: time-aligned, unequal) ------------------
     def bucket_edges(self, n_buckets: int = 8) -> Tuple[float, ...]:
         """Token-count edges at 0.5 * 4^k second boundaries: 0-0.5s,
-        0.5-2s, 2-4s, ... mapped to decode-token counts."""
-        tok_per_s = 1.0 / self.t_decode_base
-        secs = [0.5 * (4 ** k) for k in range(n_buckets - 1)]
-        return tuple(s * tok_per_s for s in secs)
+        0.5-2s, 2-4s, ... mapped to decode-token counts.  Cached by
+        value (the featurizer calls this once per routing decision;
+        keying on t_decode_base rather than self avoids pinning every
+        recalibrated profile instance in a process-lifetime cache)."""
+        return _bucket_edges(self.t_decode_base, n_buckets)
 
     def bucketize(self, d: int, n_buckets: int = 8) -> int:
         edges = self.bucket_edges(n_buckets)
         return int(np.searchsorted(edges, d, side="right"))
+
+
+@functools.lru_cache(maxsize=256)
+def _bucket_edges(t_decode_base: float, n_buckets: int
+                  ) -> Tuple[float, ...]:
+    tok_per_s = 1.0 / t_decode_base
+    secs = [0.5 * (4 ** k) for k in range(n_buckets - 1)]
+    return tuple(s * tok_per_s for s in secs)
 
 
 # Llama-2-7B on V100 (paper's Fig. 4 calibration).  KV capacity: 16 GB HBM

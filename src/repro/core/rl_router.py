@@ -98,6 +98,16 @@ def mixing_scores(cluster, req: Request, d_hat: int,
     (each instance judged by its own profile; failed instances -inf).
     Shared by the RL env, the cluster manager, and the gateway's
     policy layer -- one implementation of the paper's Eq. 1-2 scoring."""
+    if getattr(cluster, "is_vec", False):
+        # vecsim backend: Eq. 1-2 evaluated in one vector pass over the
+        # packed lane arrays (bit-identical to the scalar loop)
+        pool, lanes = cluster.pool, cluster.lane_ids
+        scores = impact.mixing_vec(
+            pool.grad1[lanes], pool.grad2[lanes], pool.eps_lat[lanes],
+            float(req.prompt_tokens), d_hat,
+            pool.rts[lanes] + pool.qps[lanes], alpha)
+        scores[pool.failed[lanes]] = -np.inf
+        return scores
     sums = [inst.resident_token_sum() + inst.queued_prompt_sum()
             for inst in cluster.instances]
     scores = impact.mixing_heterogeneous(
@@ -119,8 +129,13 @@ def guidance_from_scores(cluster, req: Request, d_hat: int,
     action is encouraged instead."""
     out = np.zeros(cluster.m + 1, np.float32)
     need = req.prompt_tokens + d_hat
-    fits = np.array([inst.free_tokens() >= need and not inst.failed
-                     for inst in cluster.instances])
+    if getattr(cluster, "is_vec", False):
+        pool, lanes = cluster.pool, cluster.lane_ids
+        fits = ((pool.cap[lanes] - pool.rts[lanes] - pool.qps[lanes]
+                 >= need) & ~pool.failed[lanes])
+    else:
+        fits = np.array([inst.free_tokens() >= need and not inst.failed
+                         for inst in cluster.instances])
     scores = scores + np.where(fits, 0.0, -0.3)
     finite = scores[np.isfinite(scores)]
     top = finite.max() if finite.size else 0.0
@@ -136,10 +151,17 @@ class RoutingEnv:
 
     ``profile`` may be one HardwareProfile (homogeneous, cfg.n_instances
     wide -- the paper's setup) or a sequence of per-instance profiles
-    (heterogeneous cluster; its length overrides cfg.n_instances)."""
+    (heterogeneous cluster; its length overrides cfg.n_instances).
+
+    ``sim_backend="vec"`` steps the episode on the vectorized
+    structure-of-arrays simulator (`core.vecsim`); passing a shared
+    ``pool`` + ``pool_ep`` instead packs this episode into a
+    multi-episode `VecSimPool` so the batched trainer advances all its
+    episodes in fused rounds."""
 
     def __init__(self, cfg: RouterConfig, profile,
-                 predict_decode: Optional[Callable] = None):
+                 predict_decode: Optional[Callable] = None,
+                 sim_backend: str = "py", pool=None, pool_ep: int = 0):
         self.cfg = cfg
         if isinstance(profile, HardwareProfile):
             self.profiles = (profile,) * cfg.n_instances
@@ -147,6 +169,9 @@ class RoutingEnv:
             self.profiles = tuple(profile)
         self.profile = self.profiles[0]     # router-level reference
         self.m = len(self.profiles)
+        self.sim_backend = "vec" if pool is not None else sim_backend
+        self._pool = pool
+        self._pool_ep = pool_ep
         # d-hat: estimated decode tokens for a request (predictor hook;
         # oracle fallback)
         self.predict_decode = predict_decode or (
@@ -154,8 +179,18 @@ class RoutingEnv:
 
     def reset(self, requests: Sequence[Request]):
         c = self.cfg
-        self.cluster = Cluster(self.profiles, self.m, c.scheduler,
-                               c.dt, c.chunked_prefill, c.n_slots)
+        if self._pool is not None:
+            from repro.core.vecsim import VecCluster
+            self.cluster = VecCluster(self.profiles, self.m,
+                                      c.scheduler, c.dt,
+                                      c.chunked_prefill, c.n_slots,
+                                      pool=self._pool,
+                                      ep=self._pool_ep)
+        else:
+            self.cluster = Cluster(self.profiles, self.m, c.scheduler,
+                                   c.dt, c.chunked_prefill, c.n_slots,
+                                   backend=self.sim_backend)
+        self._vec = getattr(self.cluster, "is_vec", False)
         self.pending = sorted(requests, key=lambda r: r.arrival)
         self.n_total = len(self.pending)
         # Incremental backlog penalty (Eq. 3 term 1).  The penalty is
@@ -164,14 +199,17 @@ class RoutingEnv:
         # arrived request every 0.02 s tick (which dominated episode wall
         # time), we maintain S = sum 1/t_hat and T = sum frac/t_hat via
         # arrival/decode/preempt/finish events and read pen = T - S in
-        # O(1).  Decode/preempt events come from SimInstance hooks.
+        # O(1).  On the Python stepper the decode/preempt events come
+        # from SimInstance hooks; the vec backend maintains the same
+        # accumulators inside its fused round loop.
         self._S = 0.0
         self._T = 0.0
         self._inv: Dict[int, tuple] = {}     # rid -> (1/d_hat, 1/t_hat)
         self._score_cache = None
-        for inst in self.cluster.instances:
-            inst.on_token = self._on_token
-            inst.on_preempt = self._on_preempt
+        if not self._vec:
+            for inst in self.cluster.instances:
+                inst.on_token = self._on_token
+                inst.on_preempt = self._on_preempt
         self._i = 0
         self._deliver()
         return self._state()
@@ -184,8 +222,13 @@ class RoutingEnv:
             d_hat = max(self.predict_decode(r), 1)
             inv_t = 1.0 / max(
                 self.profile.request_time(r.prompt_tokens, d_hat), 1e-3)
-            self._inv[r.rid] = (1.0 / d_hat, inv_t)
-            self._S += inv_t
+            if self._vec:
+                self.cluster.pool.set_backlog_terms(
+                    self.cluster.gid_of(r), self.cluster.ep, d_hat,
+                    inv_t)
+            else:
+                self._inv[r.rid] = (1.0 / d_hat, inv_t)
+                self._S += inv_t
             self._i += 1
 
     def _on_token(self, r):
@@ -204,6 +247,8 @@ class RoutingEnv:
             self._T -= min(r.decoded * iv[0], 1.0) * iv[1]
 
     def _note_finished(self, done_now):
+        if self._vec:
+            return            # the pool settles S/T at completion time
         for r in done_now:
             iv = self._inv.pop(r.rid, None)
             if iv is not None:
@@ -246,15 +291,17 @@ class RoutingEnv:
                                     self.cfg.defer_prior_bias)
 
     def _backlog_penalty(self) -> float:
+        if self._vec:
+            pool = self.cluster.pool
+            ep = self.cluster.ep
+            return float(pool.bk_t[ep] - pool.bk_s[ep])
         return self._T - self._S
 
-    def step(self, action: int, guide_w: float = 0.0):
-        """One DECISION: apply the action, then advance dt ticks until the
-        next decision point (non-empty router queue) or episode end,
-        accumulating the Eq.(3) reward.  Ticks with an empty queue have no
-        choice to make (forced defer), so they are not decision states --
-        this keeps the replay buffer full of actual decisions while
-        preserving the paper's 0.02 s simulation cadence."""
+    def _apply_action(self, action: int, guide_w: float = 0.0) -> float:
+        """Apply one routing decision (SLA watchdog included); returns
+        the immediate mixing-term reward.  Factored out of step() so
+        the batched trainer's fused multi-episode stepping can apply
+        all episodes' actions before one fused advance."""
         c = self.cfg
         cluster = self.cluster
         mix_term = 0.0
@@ -281,21 +328,85 @@ class RoutingEnv:
             finite = scores[np.isfinite(scores)]
             if finite.size > 1:
                 mix_term += guide_w * float(finite.min() - finite.max())
-        reward = mix_term
+        return mix_term
+
+    def _after_tick(self, done_now) -> tuple:
+        """Per-tick bookkeeping after a cluster advance: -> (reward
+        delta, done flag).  Shared by step() and the fused stepping."""
+        c = self.cfg
+        self._note_finished(done_now)
+        self._deliver()
+        if not c.potential_shaping:
+            delta = (self._backlog_penalty() * c.dt
+                     + c.r_w * len(done_now))
+        else:
+            delta = c.r_w_shaped * len(done_now)
+        done = (len(self.cluster.completed) >= self.n_total
+                or self.cluster.t > c.max_time)
+        return delta, done
+
+    def _span_bounds(self, cap: int = 256) -> list:
+        """Tick boundaries (sequential ``t += dt``, bit-matching the
+        per-tick stepper) from now until the next arrival, past
+        ``max_time``, or ``cap`` ticks -- the window the fused batched
+        stepper may advance in one shot: no arrivals can land inside
+        it, so no decision point can be crossed.  A non-empty router
+        queue is already a decision point after one tick (the per-tick
+        stepper re-decides immediately on a deferred head), so the
+        span is a single tick then."""
+        c = self.cfg
+        t = self.cluster.t
+        if self.cluster.central:
+            return [t + c.dt]
+        na = (self.pending[self._i].arrival
+              if self._i < self.n_total else None)
+        bounds = []
+        while len(bounds) < cap:
+            t = t + c.dt
+            bounds.append(t)
+            if (na is not None and t >= na) or t > c.max_time:
+                break
+        return bounds
+
+    def _after_span(self, done_now, bk_reward: float) -> tuple:
+        """Span-level bookkeeping: -> (reward delta, done flag).
+        ``bk_reward`` is the pool-reconstructed per-tick backlog
+        integral over the span (zero-length contribution under
+        potential shaping, which rewards completions only)."""
+        c = self.cfg
+        pool, ep = self.cluster.pool, self.cluster.ep
+        s_before = float(pool.bk_s[ep])
+        self._deliver()
+        if not c.potential_shaping:
+            # the per-tick stepper samples the backlog AFTER the
+            # arrival tick's deliveries; fold the new arrivals' S into
+            # the span's final sample
+            delta_s = float(pool.bk_s[ep]) - s_before
+            delta = (bk_reward - delta_s * c.dt
+                     + c.r_w * len(done_now))
+        else:
+            delta = c.r_w_shaped * len(done_now)
+        done = (len(self.cluster.completed) >= self.n_total
+                or self.cluster.t > c.max_time)
+        return delta, done
+
+    def step(self, action: int, guide_w: float = 0.0):
+        """One DECISION: apply the action, then advance dt ticks until the
+        next decision point (non-empty router queue) or episode end,
+        accumulating the Eq.(3) reward.  Ticks with an empty queue have no
+        choice to make (forced defer), so they are not decision states --
+        this keeps the replay buffer full of actual decisions while
+        preserving the paper's 0.02 s simulation cadence."""
+        c = self.cfg
+        cluster = self.cluster
+        reward = self._apply_action(action, guide_w)
         completed = 0
         phi_before = self._backlog_penalty()
         while True:
             done_now = cluster.advance()
-            self._note_finished(done_now)
-            self._deliver()
+            delta, done = self._after_tick(done_now)
             completed += len(done_now)
-            if not c.potential_shaping:
-                reward += (self._backlog_penalty() * c.dt
-                           + c.r_w * len(done_now))
-            else:
-                reward += c.r_w_shaped * len(done_now)
-            done = (len(cluster.completed) >= self.n_total
-                    or cluster.t > c.max_time)
+            reward += delta
             if done or cluster.central:
                 break
         if c.potential_shaping:
@@ -434,6 +545,8 @@ def evaluate(cfg: RouterConfig, profile: HardwareProfile, agent: DQNAgent,
         a = agent.act(s, env.mask(), epsilon=0.0, prior=prior,
                       q_squash=cfg.q_squash if w_sel else 0.0)
         s, _, done, _ = env.step(a)
+    if getattr(env.cluster, "is_vec", False):
+        env.cluster.sync_all()       # in-flight requests on truncation
     stats = summarize(requests)
     stats["spikes"] = sum(len(i.spikes) for i in env.cluster.instances)
     stats["router_wait_mean"] = float(np.mean(

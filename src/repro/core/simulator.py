@@ -51,6 +51,7 @@ class SimInstance:
         # queue's context sum equals its prompt sum.
         self._rts = 0.0                # sum of total_context, residents
         self._qps = 0.0                # sum of prompt_tokens, queue
+        self._out = 0.0                # outstanding prompt+decode tokens
 
     # -- router-visible state ------------------------------------------------
     def resident_token_sum(self) -> float:
@@ -60,14 +61,15 @@ class SimInstance:
         return self._qps
 
     def outstanding_tokens(self) -> float:
-        """Total tokens yet to be processed (for JSQ)."""
-        todo = 0.0
-        for r in self.residents:
-            todo += (r.prompt_tokens - r.prefilled) + max(
-                r.decode_tokens - r.decoded, 0)
-        for r in self.queue:
-            todo += r.prompt_tokens + r.decode_tokens
-        return todo
+        """Total tokens yet to be processed (for JSQ) -- O(1).
+
+        Maintained incrementally like ``_rts``/``_qps`` (it used to
+        rescan residents+queue on every JSQ route decision): submit
+        adds prompt+decode, each prefill token and each decoded token
+        subtracts one, preemption re-adds the lost progress.  Admission
+        and completion are net zero (queued requests carry no progress;
+        a completing request has none left)."""
+        return self._out
 
     def free_tokens(self) -> float:
         return self.profile.capacity_tokens - self._rts - self._qps
@@ -100,6 +102,7 @@ class SimInstance:
         req.routed_at = self.clock
         self.queue.append(req)
         self._qps += req.prompt_tokens
+        self._out += req.prompt_tokens + req.decode_tokens
 
     # -- iterate until the cluster time --------------------------------------
     def run_until(self, t: float) -> List[Request]:
@@ -154,6 +157,7 @@ class SimInstance:
             self.spikes.append(it_time)
         self.clock += it_time
         rts += prefill_tokens
+        self._out -= prefill_tokens + len(decoding)
         done: List[Request] = []
         on_token = self.on_token
         for r in decoding:
@@ -181,6 +185,7 @@ class SimInstance:
             victim = max(self.residents, key=lambda r: r.admitted_idx)
             self.residents.remove(victim)
             rts -= victim.prefilled + victim.decoded
+            self._out += victim.prefilled + victim.decoded
             if self.on_preempt is not None:
                 self.on_preempt(victim)
             victim.reset_progress()
@@ -196,6 +201,7 @@ class SimInstance:
         self.residents, self.queue = [], deque()
         self._rts = 0.0
         self._qps = 0.0
+        self._out = 0.0
         for r in orphans:
             if self.on_preempt is not None:
                 self.on_preempt(r)
@@ -216,12 +222,28 @@ class Cluster:
     paper's setup) or a sequence of per-instance profiles (heterogeneous
     cluster -- mixed GPU generations behind one router); in the latter
     case ``n_instances`` must match and ``cluster.profile`` is the first
-    entry (the router-level reference profile)."""
+    entry (the router-level reference profile).
+
+    ``backend="vec"`` returns the vectorized structure-of-arrays
+    implementation (`core.vecsim.VecCluster`, decision-for-decision
+    identical; O(rounds) stepping instead of O(requests x instances)) --
+    the Python stepper remains the reference oracle."""
+
+    def __new__(cls, profile=None, n_instances: int = 0,
+                scheduler: str = "fcfs", dt: float = 0.02,
+                chunked_prefill: int = 0,
+                n_slots: Optional[int] = None, backend: str = "py"):
+        if cls is Cluster and backend == "vec":
+            from repro.core.vecsim import VecCluster
+            # not a Cluster subclass, so __init__ below is not re-run
+            return VecCluster(profile, n_instances, scheduler, dt,
+                              chunked_prefill, n_slots)
+        return super().__new__(cls)
 
     def __init__(self, profile, n_instances: int,
                  scheduler: str = "fcfs", dt: float = 0.02,
                  chunked_prefill: int = 0,
-                 n_slots: Optional[int] = None):
+                 n_slots: Optional[int] = None, backend: str = "py"):
         if isinstance(profile, HardwareProfile):
             profiles = [profile] * n_instances
         else:
@@ -310,6 +332,8 @@ def run_heuristic(cluster: Cluster, requests: Sequence[Request], policy,
                 break               # defer
             cluster.route(act)
         cluster.advance()
+    if getattr(cluster, "is_vec", False):
+        cluster.sync_all()       # in-flight requests on truncated runs
     from repro.serving.request import summarize
     stats = summarize(requests)
     stats["spikes"] = sum(len(inst.spikes) for inst in cluster.instances)

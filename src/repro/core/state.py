@@ -44,6 +44,12 @@ def featurize(cluster: Cluster, profile: HardwareProfile,
               n_buckets: int = 8, include_impact: bool = True,
               predict_decode: Optional[Callable] = None,
               alpha: float = 0.5) -> np.ndarray:
+    if getattr(cluster, "is_vec", False):
+        # vecsim backend: read the packed per-slot arrays directly
+        # (bit-identical features, no Python object scans)
+        return _featurize_vec(cluster, profile, predict_bucket,
+                              n_buckets, include_impact,
+                              predict_decode, alpha)
     # Featurization runs once per router decision; it is written as a
     # single pass of scalar Python per instance because numpy call
     # overhead dominates at these sizes (a handful of residents).
@@ -119,6 +125,103 @@ def featurize(cluster: Cluster, profile: HardwareProfile,
     return np.asarray(feats, np.float32)
 
 
+def _featurize_vec(cluster, profile: HardwareProfile,
+                   predict_bucket, n_buckets: int, include_impact: bool,
+                   predict_decode, alpha: float) -> np.ndarray:
+    """Featurize straight from a VecCluster's packed structure-of-arrays
+    state -- the single-cluster view of :func:`featurize_vec_many`."""
+    return featurize_vec_many(
+        [cluster], [profile], [predict_decode], n_buckets=n_buckets,
+        include_impact=include_impact, alpha=alpha,
+        predict_buckets=[predict_bucket])[0]
+
+
+def featurize_vec_many(clusters, profiles, predict_decodes,
+                       n_buckets: int = 8, include_impact: bool = True,
+                       alpha: float = 0.5, predict_buckets=None):
+    """Featurize MANY VecClusters sharing one pool in a single
+    vectorized pass over the concatenated lane set (the batched
+    trainer's per-round state build: one set of matrix ops instead of
+    one per episode).  Every expression mirrors the scalar path's
+    association order on exact-integer values, so the produced float32
+    vectors are bit-identical to ``featurize`` on the Python stepper
+    (asserted by tests/test_vecsim.py)."""
+    pool = clusters[0].pool
+    lanes_cat = np.concatenate([c.lane_ids for c in clusters])
+    n = lanes_cat.size
+    hw = pool._hw
+    heads = [c.central[0] if c.central else None for c in clusters]
+    dims = INSTANCE_DIMS + (1 if include_impact else 0)
+    occ = pool.s_state[:, :hw][lanes_cat] != 0
+    p = pool.s_prompt[:, :hw][lanes_cat]
+    d = pool.s_decoded[:, :hw][lanes_cat]
+    ctx = ((pool.s_prefilled[:, :hw][lanes_cat] + d) * occ).sum(1)
+    left = (pool.s_dtotal[:, :hw][lanes_cat] - d) + ~occ * (1 << 62)
+    min_left = left.min(1) if hw else np.zeros(n, np.int64)
+    has_res = occ.any(1) if hw else np.zeros(n, bool)
+    lo_p, hi_p = (p < _E0) & occ, (p >= _E1) & occ
+    lo_d, hi_d = (d < _E0) & occ, (d >= _E1) & occ
+    scale = pool.nslots[lanes_cat]
+    block = np.zeros((n, dims))
+    block[:, 0] = lo_p.sum(1) / scale
+    block[:, 1] = (occ & ~lo_p & ~hi_p).sum(1) / scale
+    block[:, 2] = hi_p.sum(1) / scale
+    block[:, 3] = lo_d.sum(1) / scale
+    block[:, 4] = (occ & ~lo_d & ~hi_d).sum(1) / scale
+    block[:, 5] = hi_d.sum(1) / scale
+    q_prompt = pool.qps[lanes_cat]
+    cap = pool.cap[lanes_cat]
+    free = (cap - ctx - q_prompt) / cap
+    block[:, 6] = np.minimum(1.0, np.maximum(-1.0, free))
+    t_c = np.maximum(min_left, 0) * pool.tdec[lanes_cat] / 10.0
+    block[:, 7] = np.where(t_c > 1.0, 1.0, t_c) * has_res
+    alive = ~pool.failed[lanes_cat]
+    if include_impact:
+        p_head = np.zeros(n)
+        d_head = np.zeros(n)
+        has_head = np.zeros(n, bool)
+        pos = 0
+        for c, head, pd in zip(clusters, heads, predict_decodes):
+            if head is not None:
+                d_hat = pd(head) if pd else head.decode_tokens
+                p_head[pos:pos + c.m] = head.prompt_tokens
+                d_head[pos:pos + c.m] = d_hat
+                has_head[pos:pos + c.m] = True
+            pos += c.m
+        score = impact.mixing_vec(
+            pool.grad1[lanes_cat], pool.grad2[lanes_cat],
+            pool.eps_lat[lanes_cat], p_head, d_head, ctx + q_prompt,
+            alpha)
+        block[:, 8] = (np.minimum(1.0, np.maximum(-5.0, score))
+                       * has_head)
+    block *= alive[:, None]
+    out = []
+    pos = 0
+    if predict_buckets is None:
+        predict_buckets = [None] * len(clusters)
+    for c, head, prof, pb in zip(clusters, heads, profiles,
+                                 predict_buckets):
+        m = c.m
+        feats = np.zeros(dims * m + ROUTER_DIMS)
+        feats[:dims * m] = block[pos:pos + m].ravel()
+        pos += m
+        feats[dims * m] = min(len(c.central), 512) / 512.0
+        if head is not None:
+            if head.predicted_bucket is not None:
+                bucket = head.predicted_bucket
+            elif pb is not None:
+                bucket = pb(head)
+            else:
+                bucket = prof.bucketize(head.decode_tokens, n_buckets)
+            feats[dims * m + 1] = min(head.prompt_tokens, 2048) / 2048.0
+            feats[dims * m + 2] = bucket / max(n_buckets - 1, 1)
+            wait = (c.t - head.arrival) / 10.0
+            feats[dims * m + 3] = 1.0 if wait > 1.0 else (
+                0.0 if wait < 0.0 else wait)
+        out.append(feats.astype(np.float32))
+    return out
+
+
 def pad_state(s: np.ndarray, m: int, m_max: int,
               include_impact: bool = True) -> np.ndarray:
     """Pad an m-instance state vector to m_max instance slots (zeros --
@@ -137,6 +240,11 @@ def action_mask(cluster: Cluster) -> np.ndarray:
     """[m+1] bool: failed instances masked out; defer always allowed."""
     m = cluster.m
     mask = np.zeros(m + 1, bool)
+    if getattr(cluster, "is_vec", False):
+        if cluster.central:
+            mask[:m] = ~cluster.pool.failed[cluster.lane_ids]
+        mask[m] = True
+        return mask
     for i, inst in enumerate(cluster.instances):
         mask[i] = not inst.failed
     mask[m] = True

@@ -87,7 +87,9 @@ def serve_gateway(args):
     cfg = _router_cfg(args)
     gcfg = GatewayConfig(queue_cap=args.queue_cap, on_full=args.on_full,
                          scheduler=args.scheduler,
-                         chunked_prefill=args.chunked_prefill)
+                         chunked_prefill=args.chunked_prefill,
+                         backend=args.sim_backend,
+                         default_deadline_s=args.deadline)
     if args.backend == "engine":
         # tiny real engines: short random prompts, oracle-free routing
         # via the mixing heuristic (no content for the predictor)
@@ -172,6 +174,12 @@ def main():
                     choices=("poisson", "bursty", "diurnal"))
     ap.add_argument("--queue-cap", type=int, default=0,
                     help="admission queue bound (0 = unbounded)")
+    ap.add_argument("--sim-backend", choices=("py", "vec"), default="py",
+                    help="simulator stepper: python reference or the "
+                    "vectorized structure-of-arrays core")
+    ap.add_argument("--deadline", type=float, default=None,
+                    help="client timeout in seconds (deferred requests "
+                    "past it are cancelled)")
     ap.add_argument("--on-full", default="shed",
                     choices=("shed", "defer"))
     ap.add_argument("--checkpoint", default=None,

@@ -252,13 +252,25 @@ class GatewayConfig:
     metrics_window: float = 300.0
     quantiles: Tuple[float, ...] = (0.5, 0.95, 0.99)
     slo: SLO = field(default_factory=SLO)
+    # simulator backend for the built-in cluster: "py" (SimInstance
+    # reference stepper) or "vec" (core.vecsim structure-of-arrays)
+    backend: str = "py"
+    # client timeouts: a DEFERRED request whose deadline has passed is
+    # dropped from the overflow queue and counted as ``cancelled``.
+    # Requests may carry their own absolute ``deadline``; otherwise
+    # ``default_deadline_s`` (seconds after arrival; None = no client
+    # timeout) applies.
+    default_deadline_s: Optional[float] = None
+    # autoscaling: evaluate ``scale_up_when(shed_rate, p95_e2e)`` each
+    # tick and add an instance at most once per ``scale_window``
+    scale_window: float = 60.0
 
 
 class Gateway:
     """Event-driven serving gateway over a cluster backend."""
 
     def __init__(self, cfg: GatewayConfig, profiles, policy,
-                 length=None, cluster=None):
+                 length=None, cluster=None, scale_up_when=None):
         self.cfg = cfg
         if cluster is not None:
             self.cluster = cluster
@@ -266,14 +278,25 @@ class Gateway:
             profiles = tuple(profiles)
             self.cluster = Cluster(profiles, len(profiles),
                                    cfg.scheduler, cfg.dt,
-                                   cfg.chunked_prefill, cfg.n_slots)
+                                   cfg.chunked_prefill, cfg.n_slots,
+                                   backend=cfg.backend)
         self.policy = policy
         self.length = length or OracleLength()
         self.metrics = StreamMetrics(window=cfg.metrics_window,
                                      quantiles=cfg.quantiles,
                                      slo=cfg.slo)
         self.shed: List[Request] = []
+        self.cancelled: List[Request] = []
+        # minimal autoscaling hook: ``scale_up_when(shed_rate, p95_e2e)``
+        # -> bool is evaluated every tick; when it fires,
+        # ``cluster.add_instance`` runs at most once per
+        # ``cfg.scale_window`` of simulated time
+        self.scale_up_when = scale_up_when
+        self.scale_events: List[float] = []
+        self._last_scale = -float("inf")
+        self._last_scale_check = -float("inf")
         self._overflow: deque = deque()
+        self._overflow_deadlines = False   # any deferred req has one?
         self._n_admitted = 0
 
     # -- admission / backpressure --------------------------------------
@@ -282,6 +305,9 @@ class Gateway:
         return bool(cap) and len(self.cluster.central) >= cap
 
     def _admit(self, req: Request):
+        if self.cfg.default_deadline_s is not None \
+                and req.deadline is None:
+            req.deadline = req.arrival + self.cfg.default_deadline_s
         if self._queue_full():
             if self.cfg.on_full == "shed":
                 req.phase = Phase.SHED
@@ -289,17 +315,67 @@ class Gateway:
                 self.metrics.on_shed(req.tenant)
             else:                       # defer: client-side overflow
                 self._overflow.append(req)
+                if req.deadline is not None:
+                    self._overflow_deadlines = True
             return
         self.cluster.enqueue(req)
         self._n_admitted += 1
         self.metrics.on_admit(req.tenant)
 
+    def _cancel_expired(self):
+        """Client timeouts: deferred requests whose deadline has passed
+        leave the overflow queue (the client hung up; re-admitting the
+        work would burn capacity on an answer nobody reads).  O(queue)
+        per tick, paid only while some deferred request actually
+        carries a deadline."""
+        if not self._overflow or not self._overflow_deadlines:
+            return
+        now = self.cluster.t
+        keep: deque = deque()
+        for req in self._overflow:
+            if req.deadline is not None and now > req.deadline:
+                req.phase = Phase.CANCELLED
+                self.cancelled.append(req)
+                self.metrics.on_cancel(req.tenant)
+            else:
+                keep.append(req)
+        self._overflow = keep
+
     def _drain_overflow(self):
+        self._cancel_expired()
         while self._overflow and not self._queue_full():
             req = self._overflow.popleft()
             self.cluster.enqueue(req)
             self._n_admitted += 1
             self.metrics.on_admit(req.tenant)
+
+    def _maybe_scale_up(self):
+        """Closed-loop elastic scale-out: fire the user predicate on
+        the live shed rate and windowed P95 E2E, rate-limited to one
+        ``add_instance`` per ``scale_window`` of simulated time.  The
+        predicate (and its exact-quantile read over the metrics window)
+        is consulted at most once per simulated second, not per tick."""
+        if self.scale_up_when is None:
+            return
+        now = self.cluster.t
+        if now - self._last_scale < self.cfg.scale_window:
+            return
+        if now - self._last_scale_check < 1.0:
+            return
+        self._last_scale_check = now
+        st = self.metrics._all
+        offered = st.admitted + st.shed
+        shed_rate = st.shed / offered if offered else 0.0
+        p95 = st.metrics["e2e"].win.quantile(0.95, now)
+        if not self.scale_up_when(shed_rate,
+                                  0.0 if p95 is None else p95):
+            return
+        add = getattr(self.cluster, "add_instance", None)
+        if add is None:
+            return
+        add(self.cfg.scheduler, self.cfg.chunked_prefill)
+        self._last_scale = now
+        self.scale_events.append(now)
 
     # -- routing -------------------------------------------------------
     def _route_some(self):
@@ -357,15 +433,20 @@ class Gateway:
             for r in cluster.advance():
                 self.metrics.on_complete(r, r.tenant)
             self._drain_overflow()
+            self._maybe_scale_up()
             if (i >= n and not self._overflow
                     and len(cluster.completed) >= self._n_admitted):
                 break
             if cluster.t > cfg.max_time:
                 break
+        if getattr(cluster, "is_vec", False):
+            cluster.sync_all()   # in-flight requests on truncated runs
         stats = summarize(requests)
         stats["preemptions"] = sum(r.preemptions for r in requests)
         stats["shed"] = len(self.shed)
+        stats["cancelled"] = len(self.cancelled)
         stats["admitted"] = self._n_admitted
+        stats["scaled"] = len(self.scale_events)
         stats["policy"] = getattr(self.policy, "name", "?")
         stats["snapshot"] = self.metrics.snapshot(cluster.t)
         return stats

@@ -191,6 +191,7 @@ class _TenantStats:
                         for k in METRIC_KEYS}
         self.completed = 0
         self.shed = 0
+        self.cancelled = 0
         self.admitted = 0
         self.slo_attained = 0
 
@@ -223,6 +224,12 @@ class StreamMetrics:
         self._all.shed += 1
         self._tenant(tenant).shed += 1
 
+    def on_cancel(self, tenant: str = "default"):
+        """A deferred request whose client deadline passed was dropped
+        from the overflow queue."""
+        self._all.cancelled += 1
+        self._tenant(tenant).cancelled += 1
+
     def on_complete(self, req: Request, tenant: str = "default"):
         now = req.finished if req.finished is not None else 0.0
         ok = self.slo.attained(req)
@@ -241,6 +248,7 @@ class StreamMetrics:
             "admitted": st.admitted,
             "shed": st.shed,
             "shed_rate": st.shed / offered if offered else 0.0,
+            "cancelled": st.cancelled,
             "completed": st.completed,
             "slo_attained": st.slo_attained,
             "slo_rate": (st.slo_attained / st.completed

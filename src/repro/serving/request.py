@@ -16,6 +16,7 @@ class Phase(enum.Enum):
     PREEMPTED = "preempted"
     DONE = "done"
     SHED = "shed"              # rejected at the gateway (backpressure)
+    CANCELLED = "cancelled"    # client deadline passed while deferred
 
 
 _ids = itertools.count()
@@ -32,6 +33,7 @@ class Request:
     predicted_decode: Optional[int] = None   # d-hat tokens (predictor)
     tenant: str = "default"                  # gateway multi-tenant label
     tokens: Optional[list] = None            # real token ids (engine path)
+    deadline: Optional[float] = None         # client gives up after this t
 
     # lifecycle (filled by engine/simulator)
     phase: Phase = Phase.QUEUED
