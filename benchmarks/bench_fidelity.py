@@ -1,0 +1,95 @@
+"""Engine calibration + sim-vs-engine fidelity gate.
+
+Two halves of the sim<->engine loop (ROADMAP: "calibrate a real-engine
+profile and compare simulator-vs-engine gateway percentiles"):
+
+  1. ``core.calibrate`` sweeps the real jitted engine (reduced
+     qwen3-0.6b on CPU) and fits grad1/grad2/t_decode_base/
+     t_prefill_base; emits the fit R^2s (trend-gated: a calibration
+     that stops being linear is a regression).
+  2. ``serving.fidelity`` replays ONE arrival stream through the py
+     simulator, the vec simulator, and real engines under the same
+     mixing policy, and emits per-percentile deltas:
+       * on the fixed V100 paper profile every clock is virtual, so the
+         deltas are machine-independent and trend-gated tightly;
+       * on the just-calibrated profile (machine-dependent timings) the
+         gate is the TOLERANCE BAND itself: within_band=1 iff the
+         engine's P95 E2E is within BAND of the simulator's.
+
+Asserted: vec is bit-identical to py, and |P95 E2E rel delta| <= BAND
+on both profiles.
+"""
+from __future__ import annotations
+
+import os
+
+os.environ.setdefault(
+    "XLA_FLAGS",
+    "--xla_cpu_multi_thread_eigen=false intra_op_parallelism_threads=1")
+
+import jax
+
+from benchmarks.common import emit, timed
+from repro.configs import get_config
+from repro.core import calibrate as cal
+from repro.core.profiles import V100_LLAMA2_7B
+from repro.models import params as params_lib
+from repro.serving import fidelity as fid
+
+BAND = 0.35          # |engine vs sim| P95 E2E relative tolerance
+
+
+def _emit_fidelity(tag: str, report: dict, us: float):
+    for metric in ("e2e", "ttft"):
+        d = report["deltas"]["engine_vs_py"][metric]
+        parts = []
+        for pct in ("p50", "p95"):
+            rel = d[pct]["rel"]
+            if rel is not None:
+                parts.append(f"{pct}_absrel={abs(rel):.4f}")
+        emit(f"fidelity_{tag}_{metric}", us, " ".join(parts))
+
+
+def main():
+    model_cfg = get_config("qwen3-0.6b").reduced()
+    params = params_lib.init_params(jax.random.PRNGKey(0), model_cfg)
+
+    with timed() as t_cal:
+        res = cal.calibrate(model_cfg, params)
+    emit("fidelity_calibration", t_cal["us"],
+         f"r2_prefill={res.prefill_fit.r2:.4f} "
+         f"r2_decode={res.decode_fit.r2:.4f} "
+         f"grad1={res.profile.grad1:.3e} grad2={res.profile.grad2:.3e}")
+    assert res.ok, "calibration sanity (grad1 > grad2 > 0) failed"
+    assert min(res.prefill_fit.r2, res.decode_fit.r2) >= 0.90, \
+        "calibration fit degraded far below the 0.95 CI gate"
+
+    fcfg = fid.FidelityConfig()
+    # 1) machine-independent: the paper's V100 profile, virtual clocks
+    with timed() as t_v100:
+        rep_v100 = fid.run_fidelity(V100_LLAMA2_7B, fcfg,
+                                    model_cfg=model_cfg, params=params)
+    _emit_fidelity("v100", rep_v100, t_v100["us"] / 3)
+
+    # 2) the just-calibrated profile: the band IS the gate
+    with timed() as t_calp:
+        rep_cal = fid.run_fidelity(res.profile, fcfg,
+                                   model_cfg=model_cfg, params=params)
+    cal_rel = rep_cal["deltas"]["engine_vs_py"]["e2e"]["p95"]["rel"]
+    v100_rel = rep_v100["deltas"]["engine_vs_py"]["e2e"]["p95"]["rel"]
+    emit("fidelity_calibrated", t_calp["us"] / 3,
+         f"within_band={int(abs(cal_rel) <= BAND)} "
+         f"cal_e2e_p95_rel={cal_rel:+.4f}")
+
+    # vec must reproduce py bit for bit on the same stream
+    for rep in (rep_v100, rep_cal):
+        assert rep["backends"]["vec"] == rep["backends"]["py"], \
+            "vec backend diverged from the py stepper"
+    assert abs(v100_rel) <= BAND, \
+        f"V100 fidelity outside band: {v100_rel:+.4f}"
+    assert abs(cal_rel) <= BAND, \
+        f"calibrated fidelity outside band: {cal_rel:+.4f}"
+
+
+if __name__ == "__main__":
+    main()

@@ -2,21 +2,29 @@
 
 Trains baseline / workload-aware / workload-guided RL routers (short
 schedule sized for CPU) and evaluates all policies on held-out episodes:
-end-to-end latency, TTFT, router wait, preemptions."""
+end-to-end latency, TTFT, router wait, preemptions.
+
+``FIG1B_SCALE=paper`` (the nightly workflow) switches the RL variants to
+the BATCHED trainer (`core.batched_rl`, vec simulator backend) on a
+paper-sized schedule -- the guided-vs-baseline gate at a scale too slow
+for per-PR CI."""
 from __future__ import annotations
+
+import os
 
 import numpy as np
 
 from benchmarks.common import emit, timed
-from repro.core import rl_router as rl
+from repro.core import batched_rl, rl_router as rl
 from repro.core.policies import make_policy
 from repro.core.profiles import V100_LLAMA2_7B
 from repro.core.simulator import Cluster, run_heuristic
-from repro.core.workload import generate, to_requests
+from repro.core.workload import Scenario, generate, to_requests
 
 PROF = V100_LLAMA2_7B
+PAPER_SCALE = os.environ.get("FIG1B_SCALE", "") == "paper"
 N, RATE, M = 400, 20.0, 4
-EPISODES = 12
+EPISODES = 60 if PAPER_SCALE else 12
 EVAL_SEEDS = (991, 992, 993)
 
 
@@ -39,12 +47,26 @@ def main():
                 lambda r, n=name: run_heuristic(
                     Cluster(PROF, M), r, make_policy(n, PROF)))
         for variant in ("baseline", "aware", "guided"):
-            cfg = rl.RouterConfig(variant=variant, n_instances=M,
-                                  explore_episodes=8, seed=0,
-                                  q_arch="decomposed")
-            out = rl.train(cfg, PROF,
-                           lambda ep: _reqs(100 + ep), EPISODES,
-                           valid_fn=lambda: _reqs(555))
+            cfg = rl.RouterConfig(
+                variant=variant, n_instances=M, seed=0,
+                explore_episodes=24 if PAPER_SCALE else 8,
+                q_arch="decomposed")
+            if PAPER_SCALE:
+                # the batched trainer at paper scale: N concurrent
+                # episodes on the fused vec simulator, one shared buffer
+                out = batched_rl.train_batched(
+                    cfg,
+                    lambda ep: Scenario.homogeneous(PROF, M,
+                                                    _reqs(100 + ep)),
+                    EPISODES,
+                    bcfg=batched_rl.BatchedRLConfig(
+                        n_envs=8, m_max=M, sim_backend="vec"),
+                    valid_fn=lambda: Scenario.homogeneous(
+                        PROF, M, _reqs(555)))
+            else:
+                out = rl.train(cfg, PROF,
+                               lambda ep: _reqs(100 + ep), EPISODES,
+                               valid_fn=lambda: _reqs(555))
             rows[f"rl_{variant}"] = eval_policy(
                 lambda r, c=cfg, a=out["agent"]: rl.evaluate(c, PROF, a, r))
     rr = rows["round_robin"]["e2e_mean"]

@@ -29,6 +29,7 @@ MODULES = [
     ("fig1b", "benchmarks.bench_fig1b_rl"),
     ("gateway", "benchmarks.bench_gateway"),
     ("vecsim", "benchmarks.bench_vecsim"),
+    ("fidelity", "benchmarks.bench_fidelity"),
     ("batched_rl", "benchmarks.bench_batched_rl"),
     ("fig5", "benchmarks.bench_fig5_metrics"),
     ("table3", "benchmarks.bench_table3_chunking"),

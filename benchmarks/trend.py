@@ -34,7 +34,7 @@ LOWER_IS_BETTER = ("p50", "p95", "p99", "e2e", "ttft", "tbt", "us",
                    "seconds", "preempt", "shed", "loss", "wait",
                    "makespan", "spikes")
 HIGHER_IS_BETTER = ("acc", "bucket_acc", "slo", "speedup", "eps",
-                    "throughput", "attain")
+                    "throughput", "attain", "r2", "within", "fairness")
 
 _NUM = re.compile(r"([A-Za-z_][\w.]*)=(-?\d+(?:\.\d+)?(?:e-?\d+)?)")
 

@@ -108,12 +108,15 @@ class _Slot:
         self.ticks = 0
         self.done = False
         s = self.env.reset(scenario.requests)
-        self._set_state(s, m_max, cfg.include_impact_features)
+        self._set_state(s, m_max, cfg)
 
-    def _set_state(self, s: np.ndarray, m_max: int, impact: bool):
+    def _set_state(self, s: np.ndarray, m_max: int,
+                   cfg: rl.RouterConfig):
         self.s = s
         m = self.env.m
-        self.s_pad = state_lib.pad_state(s, m, m_max, impact)
+        self.s_pad = state_lib.pad_state(
+            s, m, m_max, cfg.include_impact_features,
+            cfg.include_hardware_features)
         self.mask_pad = state_lib.pad_mask(self.env.mask(), m, m_max)
 
     def prior_pad(self, m_max: int) -> Optional[np.ndarray]:
@@ -298,7 +301,8 @@ def train_batched(cfg: rl.RouterConfig,
                 [sl.env.predict_decode for sl in slots],
                 n_buckets=cfg.n_buckets,
                 include_impact=cfg.include_impact_features,
-                alpha=cfg.alpha)
+                alpha=cfg.alpha,
+                include_hardware=cfg.include_hardware_features)
         for i, sl in enumerate(slots):
             a_pad = int(acts[i])
             s_prev_pad = sl.s_pad
@@ -308,7 +312,7 @@ def train_batched(cfg: rl.RouterConfig,
             else:
                 s2, r, done, _ = sl.env.step(
                     sl.unpad_action(a_pad, m_max), guide_w=sl.w_k)
-            sl._set_state(s2, m_max, cfg.include_impact_features)
+            sl._set_state(s2, m_max, cfg)
             if cfg.nstep > 0:
                 sl.window.append((s_prev_pad, a_pad, len(sl.rew)))
                 sl.rew.append(r / scale)
@@ -394,7 +398,7 @@ def evaluate_scenarios(cfg: rl.RouterConfig, agent,
         for i, sl in enumerate(live):
             a = sl.unpad_action(int(acts[i]), m_max)
             s2, _, done, _ = sl.env.step(a)
-            sl._set_state(s2, m_max, cfg.include_impact_features)
+            sl._set_state(s2, m_max, cfg)
             sl.done = done
         live = [sl for sl in live if not sl.done]
     out = []

@@ -54,6 +54,12 @@ class RouterConfig:
     hidden: tuple = (64, 64)
     lr: float = 3e-4
     include_impact_features: bool = True
+    # per-instance hardware block (grad1/grad2/kv-capacity) in the state
+    # (PR-1 follow-up): lets one agent trained across calibrated +
+    # synthetic profiles condition on the hardware itself instead of
+    # inferring speed from load dynamics.  Off by default: existing
+    # checkpoints keep their state shape.
+    include_hardware_features: bool = False
     reward_scale: float = 300.0
     q_squash: float = 0.05       # bound on Q's selection influence (guided)
     q_arch: str = "mlp"              # "mlp" (paper) | "decomposed" (ours)
@@ -259,7 +265,8 @@ class RoutingEnv:
         return state_lib.featurize(
             self.cluster, self.profile, n_buckets=self.cfg.n_buckets,
             include_impact=self.cfg.include_impact_features,
-            predict_decode=self.predict_decode, alpha=self.cfg.alpha)
+            predict_decode=self.predict_decode, alpha=self.cfg.alpha,
+            include_hardware=self.cfg.include_hardware_features)
 
     def mask(self) -> np.ndarray:
         return state_lib.action_mask(self.cluster)
@@ -424,10 +431,11 @@ def make_agent(cfg: RouterConfig, m: Optional[int] = None) -> DQNAgent:
     """Build the DQN agent for an m-instance action space (defaults to
     cfg.n_instances; the batched runner passes its padded width m_max)."""
     m = m or cfg.n_instances
-    inst_dims = state_lib.INSTANCE_DIMS + (
-        1 if cfg.include_impact_features else 0)
+    inst_dims = state_lib.instance_dims(cfg.include_impact_features,
+                                        cfg.include_hardware_features)
     dcfg = DQNConfig(
-        state_dim=state_lib.state_dim(m, cfg.include_impact_features),
+        state_dim=state_lib.state_dim(m, cfg.include_impact_features,
+                                      cfg.include_hardware_features),
         n_actions=m + 1, hidden=cfg.hidden,
         gamma=cfg.gamma, lr=cfg.lr, q_arch=cfg.q_arch,
         inst_dims=inst_dims, router_dims=state_lib.ROUTER_DIMS,

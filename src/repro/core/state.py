@@ -16,6 +16,13 @@ that instance's own ``HardwareProfile`` (capacity fraction, earliest
 completion, impact score), so mixed-hardware episodes featurize
 correctly; the ``profile`` argument is the router-level reference used
 only for the head request's decode bucket.
+
+``include_hardware`` appends the instance's calibration constants
+(grad1 / grad2 / KV capacity, normalized and clipped to [0, 1]) to each
+instance block: with them an agent trained on a MIX of calibrated and
+synthetic profiles can condition placement on what the hardware *is*
+instead of inferring speed from load dynamics (off by default --
+existing checkpoints keep their state shape).
 """
 from __future__ import annotations
 
@@ -32,29 +39,46 @@ N_BUCKETS = len(BUCKET_EDGES) + 1
 INSTANCE_DIMS = 2 * N_BUCKETS + 2
 ROUTER_DIMS = 4
 
+# per-instance hardware block (optional): grad1 / grad2 / kv-capacity,
+# scaled so the paper's V100 and A100 calibrations land mid-range and
+# clipped to [0, 1]
+HW_DIMS = 3
+HW_G1_SCALE = 1e3       # grad1 ~3.2e-4 (V100) -> 0.32
+HW_G2_SCALE = 1e4       # grad2 ~3.3e-5 (V100) -> 0.33
+HW_CAP_SCALE = 1e-5     # capacity 60k (A100)  -> 0.60
+
 _E0, _E1 = BUCKET_EDGES
 
 
-def state_dim(m: int, include_impact: bool = True) -> int:
-    return (INSTANCE_DIMS + (1 if include_impact else 0)) * m + ROUTER_DIMS
+def instance_dims(include_impact: bool = True,
+                  include_hardware: bool = False) -> int:
+    return (INSTANCE_DIMS + (1 if include_impact else 0)
+            + (HW_DIMS if include_hardware else 0))
+
+
+def state_dim(m: int, include_impact: bool = True,
+              include_hardware: bool = False) -> int:
+    return instance_dims(include_impact, include_hardware) * m \
+        + ROUTER_DIMS
 
 
 def featurize(cluster: Cluster, profile: HardwareProfile,
               predict_bucket: Optional[Callable] = None,
               n_buckets: int = 8, include_impact: bool = True,
               predict_decode: Optional[Callable] = None,
-              alpha: float = 0.5) -> np.ndarray:
+              alpha: float = 0.5,
+              include_hardware: bool = False) -> np.ndarray:
     if getattr(cluster, "is_vec", False):
         # vecsim backend: read the packed per-slot arrays directly
         # (bit-identical features, no Python object scans)
         return _featurize_vec(cluster, profile, predict_bucket,
                               n_buckets, include_impact,
-                              predict_decode, alpha)
+                              predict_decode, alpha, include_hardware)
     # Featurization runs once per router decision; it is written as a
     # single pass of scalar Python per instance because numpy call
     # overhead dominates at these sizes (a handful of residents).
     head = cluster.central[0] if cluster.central else None
-    dims = INSTANCE_DIMS + (1 if include_impact else 0)
+    dims = instance_dims(include_impact, include_hardware)
     feats = [0.0] * (dims * cluster.m + ROUTER_DIMS)
     if include_impact and head is not None:
         d_hat = (predict_decode(head) if predict_decode
@@ -109,6 +133,14 @@ def featurize(cluster: Cluster, profile: HardwareProfile,
                                     ctx + q_ctx, alpha)
             feats[base + 8] = -5.0 if score < -5.0 else (
                 1.0 if score > 1.0 else score)
+        if include_hardware:
+            hb = base + INSTANCE_DIMS + (1 if include_impact else 0)
+            g1 = prof.grad1 * HW_G1_SCALE
+            feats[hb] = 1.0 if g1 > 1.0 else g1
+            g2 = prof.grad2 * HW_G2_SCALE
+            feats[hb + 1] = 1.0 if g2 > 1.0 else g2
+            cp = prof.capacity_tokens * HW_CAP_SCALE
+            feats[hb + 2] = 1.0 if cp > 1.0 else cp
     feats[dims * cluster.m] = min(len(cluster.central), 512) / 512.0
     if head is not None:
         if head.predicted_bucket is not None:
@@ -127,18 +159,21 @@ def featurize(cluster: Cluster, profile: HardwareProfile,
 
 def _featurize_vec(cluster, profile: HardwareProfile,
                    predict_bucket, n_buckets: int, include_impact: bool,
-                   predict_decode, alpha: float) -> np.ndarray:
+                   predict_decode, alpha: float,
+                   include_hardware: bool = False) -> np.ndarray:
     """Featurize straight from a VecCluster's packed structure-of-arrays
     state -- the single-cluster view of :func:`featurize_vec_many`."""
     return featurize_vec_many(
         [cluster], [profile], [predict_decode], n_buckets=n_buckets,
         include_impact=include_impact, alpha=alpha,
-        predict_buckets=[predict_bucket])[0]
+        predict_buckets=[predict_bucket],
+        include_hardware=include_hardware)[0]
 
 
 def featurize_vec_many(clusters, profiles, predict_decodes,
                        n_buckets: int = 8, include_impact: bool = True,
-                       alpha: float = 0.5, predict_buckets=None):
+                       alpha: float = 0.5, predict_buckets=None,
+                       include_hardware: bool = False):
     """Featurize MANY VecClusters sharing one pool in a single
     vectorized pass over the concatenated lane set (the batched
     trainer's per-round state build: one set of matrix ops instead of
@@ -151,7 +186,7 @@ def featurize_vec_many(clusters, profiles, predict_decodes,
     n = lanes_cat.size
     hw = pool._hw
     heads = [c.central[0] if c.central else None for c in clusters]
-    dims = INSTANCE_DIMS + (1 if include_impact else 0)
+    dims = instance_dims(include_impact, include_hardware)
     occ = pool.s_state[:, :hw][lanes_cat] != 0
     p = pool.s_prompt[:, :hw][lanes_cat]
     d = pool.s_decoded[:, :hw][lanes_cat]
@@ -194,6 +229,14 @@ def featurize_vec_many(clusters, profiles, predict_decodes,
             alpha)
         block[:, 8] = (np.minimum(1.0, np.maximum(-5.0, score))
                        * has_head)
+    if include_hardware:
+        hb = INSTANCE_DIMS + (1 if include_impact else 0)
+        block[:, hb] = np.minimum(pool.grad1[lanes_cat] * HW_G1_SCALE,
+                                  1.0)
+        block[:, hb + 1] = np.minimum(pool.grad2[lanes_cat]
+                                      * HW_G2_SCALE, 1.0)
+        block[:, hb + 2] = np.minimum(pool.cap[lanes_cat]
+                                      * HW_CAP_SCALE, 1.0)
     block *= alive[:, None]
     out = []
     pos = 0
@@ -223,13 +266,14 @@ def featurize_vec_many(clusters, profiles, predict_decodes,
 
 
 def pad_state(s: np.ndarray, m: int, m_max: int,
-              include_impact: bool = True) -> np.ndarray:
+              include_impact: bool = True,
+              include_hardware: bool = False) -> np.ndarray:
     """Pad an m-instance state vector to m_max instance slots (zeros --
     the same encoding as a failed instance) so episodes with different
     cluster shapes share one replay buffer / Q network."""
     if m == m_max:
         return s
-    dims = INSTANCE_DIMS + (1 if include_impact else 0)
+    dims = instance_dims(include_impact, include_hardware)
     out = np.zeros(dims * m_max + ROUTER_DIMS, np.float32)
     out[:dims * m] = s[:dims * m]
     out[dims * m_max:] = s[dims * m:]

@@ -130,6 +130,7 @@ class VecSimPool:
         self.grad1 = z(0)
         self.grad2 = z(0)
         self.tdec = z(0)
+        self.tpre = z(0)            # profile.t_prefill_base
         self.eps_lat = z(0)         # profile.epsilon (Eq. 1 tolerance)
         self.chunk = z(0, np.int64)
         self.sched = z(0, np.int8)
@@ -180,8 +181,8 @@ class VecSimPool:
     # -- growth ----------------------------------------------------------
     _LANE_1D = ("lane_ep", "lane_local", "failed", "clock", "rts", "qps",
                 "outst", "cap", "nslots", "grad1", "grad2", "tdec",
-                "eps_lat", "chunk", "sched", "admit_ctr", "res_cnt",
-                "pref_cnt", "qhead", "qcnt", "lane_ivv")
+                "tpre", "eps_lat", "chunk", "sched", "admit_ctr",
+                "res_cnt", "pref_cnt", "qhead", "qcnt", "lane_ivv")
     _SLOT_2D = ("res_gid", "s_state", "s_prompt", "s_dtotal",
                 "s_prefilled", "s_decoded", "s_admit", "s_first",
                 "s_pfdone", "s_invd", "s_invt", "s_capat")
@@ -326,6 +327,7 @@ class VecSimPool:
         self.grad1[lane] = prof.grad1
         self.grad2[lane] = prof.grad2
         self.tdec[lane] = prof.t_decode_base
+        self.tpre[lane] = prof.t_prefill_base
         self.eps_lat[lane] = prof.epsilon
         self.chunk[lane] = chunked_prefill
         self.sched[lane] = _SCHED_CODE[scheduler]
@@ -680,9 +682,12 @@ class VecSimPool:
                            * fin_pref)
                     self.lane_ivv += ivv.sum(1)
             self.outst -= prefill_tokens
-        # -- iteration time + spikes (Fig. 1a) --------------------------
+        # -- iteration time + spikes (Fig. 1a); the prefill-base term
+        # mirrors HardwareProfile.iteration_time's association order
+        # (x + 0.0 == x, so zero-tpre profiles stay bit-identical) ------
         it_time = (self.tdec + self.grad1 * prefill_tokens
-                   + self.grad2 * rts)
+                   + self.grad2 * rts
+                   + self.tpre * (prefill_tokens > 0))
         sp = active & (it_time > 2.0 * self.tdec)
         if sp.any():
             for i in np.flatnonzero(sp):

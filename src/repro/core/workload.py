@@ -229,7 +229,9 @@ def make_scenario(seed: int,
                   m_range: Tuple[int, int] = (2, 6),
                   rate_per_speed: Tuple[float, float] = (3.5, 6.5),
                   patterns: Sequence[str] = ARRIVAL_PATTERNS,
-                  hetero_prob: float = 0.5) -> Scenario:
+                  hetero_prob: float = 0.5,
+                  profiles: Optional[Sequence[HardwareProfile]] = None
+                  ) -> Scenario:
     """Sample one heterogeneous-cluster episode.
 
     Cluster width, hardware mix, arrival pattern, task mix, and load are
@@ -237,14 +239,25 @@ def make_scenario(seed: int,
     with the sampled cluster's aggregate decode speed so that every
     episode is loaded-but-serviceable, and decode lengths are clipped so
     every request fits the smallest sampled KV pool (unserviceable
-    requests would never complete)."""
+    requests would never complete).
+
+    ``profiles`` pins the exact cluster (width and per-instance
+    hardware) instead of sampling it -- e.g. a mix of engine-calibrated
+    and synthetic profiles (``core.calibrate``) so the trained agent
+    sees real hardware among the synthetic draws; arrivals and the task
+    mix still vary with ``seed``."""
     rng = np.random.default_rng(seed)
-    m = int(rng.integers(m_range[0], m_range[1] + 1))
-    pool = list(profile_pool)
-    if len(pool) > 1 and rng.random() < hetero_prob:
-        profiles = tuple(pool[i] for i in rng.integers(0, len(pool), m))
+    if profiles is not None:
+        profiles = tuple(profiles)
+        m = len(profiles)
     else:
-        profiles = (pool[int(rng.integers(0, len(pool)))],) * m
+        m = int(rng.integers(m_range[0], m_range[1] + 1))
+        pool = list(profile_pool)
+        if len(pool) > 1 and rng.random() < hetero_prob:
+            profiles = tuple(pool[i]
+                             for i in rng.integers(0, len(pool), m))
+        else:
+            profiles = (pool[int(rng.integers(0, len(pool)))],) * m
     pattern = str(patterns[int(rng.integers(0, len(patterns)))])
     # aggregate service speed relative to the V100 reference
     speed = sum(V100_LLAMA2_7B.t_decode_base / p.t_decode_base

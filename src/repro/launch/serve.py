@@ -10,6 +10,16 @@ instances or the calibrated simulator.
   PYTHONPATH=src python -m repro.launch.serve --mode gateway \
       --backend engine --policy mixing --requests 12
 
+  # calibrate a HardwareProfile from the real engine (core.calibrate):
+  # sweep + fit, print diagnostics, write a committable JSON artifact.
+  # --min-r2 makes a loose fit a non-zero exit (CI calibration-smoke).
+  PYTHONPATH=src python -m repro.launch.serve --calibrate \
+      --arch qwen3-0.6b --profile-json profile.json --min-r2 0.95
+
+  # serve on a previously calibrated profile instead of the V100 default
+  PYTHONPATH=src python -m repro.launch.serve --mode gateway \
+      --profile-json profile.json
+
   # closed-loop simulator episode (legacy path)
   PYTHONPATH=src python -m repro.launch.serve --mode sim --requests 400
 
@@ -20,11 +30,24 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
+import os
+import sys
+
+# calibration times jitted kernels: single-threaded XLA keeps the sweep
+# linear (multi-threaded CPU XLA switches parallelization strategy with
+# size, which reads as piecewise cost steps).  Must be set before jax
+# imports, so it is keyed off argv rather than the parsed args.
+if "--calibrate" in sys.argv:
+    os.environ.setdefault(
+        "XLA_FLAGS",
+        "--xla_cpu_multi_thread_eigen=false "
+        "intra_op_parallelism_threads=1")
 
 import jax
 import numpy as np
 
 from repro.configs import get_config
+from repro.core import calibrate as cal
 from repro.core import impact, rl_router as rl
 from repro.core import workload as wl
 from repro.core.cluster_manager import ManagedCluster, ManagedClusterConfig
@@ -51,19 +74,54 @@ def _router_cfg(args) -> rl.RouterConfig:
                            chunked_prefill=args.chunked_prefill)
 
 
-def _train_quick_agent(args, cfg: rl.RouterConfig):
-    out = rl.train(cfg, V100_LLAMA2_7B,
+def _train_quick_agent(args, cfg: rl.RouterConfig, profile=None):
+    out = rl.train(cfg, profile or V100_LLAMA2_7B,
                    lambda ep: to_requests(generate(args.requests, seed=ep),
                                           rate=args.rate, seed=ep + 50),
                    n_episodes=args.train_episodes)
     return out["agent"]
 
 
+def _base_profile(args):
+    """The serving profile: a calibrated JSON artifact when given,
+    else the paper's V100 calibration."""
+    if args.profile_json and not args.calibrate:
+        return cal.load_profile(args.profile_json)
+    return V100_LLAMA2_7B
+
+
+def run_calibrate(args) -> int:
+    """--calibrate: sweep the reduced engine for --arch, fit a profile,
+    print diagnostics, optionally write --profile-json.  Non-zero exit
+    when the fit misses --min-r2 or the gradient sanity ordering (the
+    CI calibration-smoke gate)."""
+    cfg = get_config(args.arch).reduced()
+    params = params_lib.init_params(jax.random.PRNGKey(0), cfg)
+    res = cal.calibrate(cfg, params)
+    print(cal.format_result(res))
+    if args.profile_json:
+        res.save(args.profile_json)
+        print(f"wrote {args.profile_json}")
+    failures = []
+    if res.prefill_fit.r2 < args.min_r2:
+        failures.append(f"prefill R^2 {res.prefill_fit.r2:.4f} "
+                        f"< {args.min_r2}")
+    if res.decode_fit.r2 < args.min_r2:
+        failures.append(f"decode R^2 {res.decode_fit.r2:.4f} "
+                        f"< {args.min_r2}")
+    if not res.ok:
+        failures.append("gradient sanity (grad1 > grad2 > 0) failed")
+    for f in failures:
+        print(f"CALIBRATION GATE: {f}")
+    return 1 if failures else 0
+
+
 def serve_sim(args):
     cfg = _router_cfg(args)
-    agent = _train_quick_agent(args, cfg)
+    base = _base_profile(args)
+    agent = _train_quick_agent(args, cfg, base)
     mgr = ManagedCluster(ManagedClusterConfig(n_instances=args.instances),
-                         cfg, V100_LLAMA2_7B, agent)
+                         cfg, base, agent)
     reqs = to_requests(generate(args.requests, seed=991), rate=args.rate,
                        seed=992)
     stats = mgr.serve(reqs)
@@ -74,7 +132,9 @@ def serve_sim(args):
 
 def _tiny_engines(args, capacity: int = 400):
     cfg = get_config(args.arch).reduced()
-    prof = dataclasses.replace(V100_LLAMA2_7B, capacity_tokens=capacity)
+    base = _base_profile(args)
+    prof = dataclasses.replace(
+        base, capacity_tokens=min(base.capacity_tokens, capacity))
     params = params_lib.init_params(jax.random.PRNGKey(0), cfg)
     return [LLMInstance(cfg, params, prof,
                         get_scheduler(args.scheduler), n_slots=4,
@@ -116,19 +176,21 @@ def serve_gateway(args):
                 for i in range(args.requests)]
         stats = gw.run(reqs)
     else:
-        profiles = (V100_LLAMA2_7B,) * args.instances
+        base = _base_profile(args)
+        profiles = (base,) * args.instances
         scn = wl.make_tenant_scenario(seed=7, n_requests=args.requests,
                                       rate=args.rate,
                                       pattern=args.pattern,
                                       profiles=profiles)
         length = MicroBatchPredictor(quick_bucket_predictor(
-            V100_LLAMA2_7B, n_train=2000, epochs=2))
+            base, n_train=2000, epochs=2))
         if args.policy == "rl":
             if args.checkpoint:
                 policy = restore_rl_policy(cfg, args.checkpoint,
                                            m=args.instances)
             else:
-                policy = RLPolicy(_train_quick_agent(args, cfg), cfg)
+                policy = RLPolicy(
+                    _train_quick_agent(args, cfg, base), cfg)
         else:
             policy = make_gateway_policy(args.policy, cfg)
         gw = Gateway(gcfg, profiles, policy, length=length)
@@ -184,6 +246,18 @@ def main():
                     choices=("shed", "defer"))
     ap.add_argument("--checkpoint", default=None,
                     help="router checkpoint dir for --policy rl")
+    ap.add_argument("--calibrate", action="store_true",
+                    help="sweep the reduced --arch engine and fit a "
+                    "HardwareProfile (core.calibrate); prints fit "
+                    "diagnostics and exits")
+    ap.add_argument("--profile-json", default=None,
+                    help="with --calibrate: write the calibrated "
+                    "profile artifact here; otherwise: serve with the "
+                    "profile loaded from this JSON instead of the "
+                    "default V100 calibration")
+    ap.add_argument("--min-r2", type=float, default=0.0,
+                    help="with --calibrate: exit non-zero unless both "
+                    "fits reach this R^2 (CI gate)")
     ap.add_argument("--arch", default="llama-2-7b")
     ap.add_argument("--instances", type=int, default=4)
     ap.add_argument("--requests", type=int, default=400)
@@ -192,6 +266,8 @@ def main():
     ap.add_argument("--chunked-prefill", type=int, default=0)
     ap.add_argument("--train-episodes", type=int, default=8)
     args = ap.parse_args()
+    if args.calibrate:
+        sys.exit(run_calibrate(args))
     if args.mode == "sim":
         serve_sim(args)
     elif args.mode == "gateway":

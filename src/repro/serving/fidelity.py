@@ -1,0 +1,224 @@
+"""Sim-vs-engine fidelity harness: does the simulator predict the
+engine?
+
+The whole routing stack -- RL training, the heuristics, every benchmark
+-- runs on the discrete-event simulator; production serves on real
+``LLMInstance`` engines.  The simulator is only trustworthy if, given
+the same calibrated ``HardwareProfile``, it produces the same latency
+*distributions* the engine does.  This module quantifies that: it
+replays ONE gateway arrival stream through
+
+  * the Python-stepper simulator (``Cluster(backend="py")``),
+  * the vectorized simulator (``Cluster(backend="vec")``), and
+  * real jax engines (``EngineClusterAdapter`` over ``LLMInstance``),
+
+each behind an identically-configured ``Gateway`` under one
+``RoutingPolicy``, and reports per-percentile TTFT / TBT / E2E deltas
+between every backend pair.  Residual deltas are the engine mechanics
+the simulator abstracts (slot insert timing, first-token anchoring at
+iteration start vs end); with a calibrated profile they stay inside a
+narrow band -- ``benchmarks/bench_fidelity.py`` gates that band in CI.
+
+The stream is engine-sized (prompts from a small set of lengths so the
+engine pays a bounded number of prefill retraces; decode lengths within
+the reduced KV budget) and fully deterministic, so fidelity reports are
+reproducible across machines: every clock involved is virtual.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.profiles import HardwareProfile, profile_to_json
+from repro.serving.gateway import (EngineClusterAdapter, Gateway,
+                                   GatewayConfig)
+from repro.serving.policies import make_gateway_policy
+from repro.serving.request import Request
+
+METRICS = ("ttft", "tbt", "e2e")
+
+
+@dataclass(frozen=True)
+class FidelityConfig:
+    """One replayed stream + the serving shape it runs on."""
+    n_requests: int = 48
+    rate: float = 4.0                  # mean arrival rate (req/s)
+    seed: int = 0
+    n_instances: int = 2
+    n_slots: int = 4
+    cache_len: int = 128               # engine KV cache length per slot
+    capacity_tokens: int = 400         # profile KV budget (engine-sized)
+    # prompts drawn from a FIXED length set: the engine jit-compiles one
+    # prefill executable per distinct prompt length
+    prompt_lengths: Tuple[int, ...] = (16, 32, 48, 64)
+    decode_range: Tuple[int, int] = (4, 48)
+    policy: str = "mixing"
+    dt: float = 0.02
+    max_time: float = 600.0
+    quantiles: Tuple[float, ...] = (0.5, 0.95, 0.99)
+    backends: Tuple[str, ...] = ("py", "vec", "engine")
+
+
+def serving_profile(profile: HardwareProfile,
+                    fcfg: FidelityConfig) -> HardwareProfile:
+    """Clamp a (possibly datacenter-sized) profile to the harness's
+    engine-sized serving shape so sim and engine share one budget."""
+    return dataclasses.replace(
+        profile,
+        capacity_tokens=min(profile.capacity_tokens,
+                            fcfg.capacity_tokens),
+        max_batch=fcfg.n_slots)
+
+
+def make_stream(fcfg: FidelityConfig) -> List[Tuple[int, int, float]]:
+    """The deterministic arrival stream as (prompt, decode, arrival)
+    specs -- each backend materializes its own fresh Request objects."""
+    rng = np.random.default_rng(fcfg.seed)
+    gaps = rng.exponential(1.0 / fcfg.rate, size=fcfg.n_requests)
+    arrivals = np.cumsum(gaps)
+    lengths = rng.choice(fcfg.prompt_lengths, size=fcfg.n_requests)
+    lo, hi = fcfg.decode_range
+    decodes = rng.integers(lo, hi + 1, size=fcfg.n_requests)
+    return [(int(p), int(d), float(t))
+            for p, d, t in zip(lengths, decodes, arrivals)]
+
+
+def _requests(stream: Sequence[Tuple[int, int, float]]) -> List[Request]:
+    return [Request(prompt_tokens=p, decode_tokens=d, arrival=t,
+                    tenant="fidelity") for p, d, t in stream]
+
+
+def _gateway_cfg(fcfg: FidelityConfig, backend: str) -> GatewayConfig:
+    return GatewayConfig(dt=fcfg.dt, n_slots=fcfg.n_slots,
+                         max_time=fcfg.max_time,
+                         backend=backend if backend != "engine" else "py")
+
+
+def _percentiles(vals: List[float], quantiles: Sequence[float]) -> Dict:
+    out = {}
+    arr = np.array([v for v in vals if v is not None], float)
+    for q in quantiles:
+        key = f"p{int(q * 100)}"
+        out[key] = float(np.quantile(arr, q)) if arr.size else None
+    out["mean"] = float(arr.mean()) if arr.size else None
+    out["n"] = int(arr.size)
+    return out
+
+
+def _backend_cluster(backend: str, profile: HardwareProfile,
+                     fcfg: FidelityConfig, model_cfg, params):
+    if backend != "engine":
+        return None                      # Gateway builds the sim cluster
+    import jax
+    from repro.models import params as params_lib
+    from repro.serving.engine import LLMInstance
+    from repro.serving.scheduler import get_scheduler
+    if params is None:
+        if model_cfg is None:
+            raise ValueError("backend 'engine' needs model_cfg (and "
+                             "optionally params)")
+        params = params_lib.init_params(jax.random.PRNGKey(0), model_cfg)
+    engines = [LLMInstance(model_cfg, params, profile,
+                           get_scheduler("fcfs"), n_slots=fcfg.n_slots,
+                           cache_len=fcfg.cache_len, instance_id=i)
+               for i in range(fcfg.n_instances)]
+    return EngineClusterAdapter(engines, dt=fcfg.dt)
+
+
+def run_backend(backend: str, profile: HardwareProfile,
+                fcfg: FidelityConfig, stream, model_cfg=None,
+                params=None) -> Dict:
+    """Serve the stream on one backend; returns the percentile report."""
+    prof = serving_profile(profile, fcfg)
+    reqs = _requests(stream)
+    cluster = _backend_cluster(backend, prof, fcfg, model_cfg, params)
+    gw = Gateway(_gateway_cfg(fcfg, backend),
+                 (prof,) * fcfg.n_instances,
+                 make_gateway_policy(fcfg.policy), cluster=cluster)
+    stats = gw.run(reqs)
+    done = [r for r in reqs if r.finished is not None]
+    report = {m: _percentiles([getattr(r, m) for r in done],
+                              fcfg.quantiles) for m in METRICS}
+    report["completed"] = len(done)
+    report["preemptions"] = int(sum(r.preemptions for r in reqs))
+    report["makespan"] = (max(r.finished for r in done)
+                          - min(r.arrival for r in done)) if done else None
+    report["shed"] = stats["shed"]
+    return report
+
+
+def _deltas(a: Dict, b: Dict, quantiles: Sequence[float]) -> Dict:
+    """Per-metric percentile deltas b - a (absolute and relative)."""
+    out = {}
+    for m in METRICS:
+        md = {}
+        for q in quantiles:
+            key = f"p{int(q * 100)}"
+            va, vb = a[m].get(key), b[m].get(key)
+            if va is None or vb is None:
+                md[key] = {"abs": None, "rel": None}
+            else:
+                md[key] = {"abs": vb - va,
+                           "rel": (vb - va) / va if va else None}
+        out[m] = md
+    return out
+
+
+def run_fidelity(profile: HardwareProfile,
+                 fcfg: Optional[FidelityConfig] = None,
+                 model_cfg=None, params=None) -> Dict:
+    """The harness: one stream, every configured backend, all pairwise
+    percentile deltas.  ``model_cfg``/``params`` are only needed when
+    ``fcfg.backends`` includes ``"engine"``."""
+    fcfg = fcfg or FidelityConfig()
+    stream = make_stream(fcfg)
+    backends = {}
+    for backend in fcfg.backends:
+        backends[backend] = run_backend(backend, profile, fcfg, stream,
+                                        model_cfg, params)
+    deltas = {}
+    names = list(fcfg.backends)
+    for i, a in enumerate(names):
+        for b in names[i + 1:]:
+            deltas[f"{b}_vs_{a}"] = _deltas(backends[a], backends[b],
+                                            fcfg.quantiles)
+    return {
+        "profile": profile_to_json(serving_profile(profile, fcfg)),
+        "config": dataclasses.asdict(fcfg),
+        "backends": backends,
+        "deltas": deltas,
+    }
+
+
+def save_report(report: Dict, path: str):
+    with open(path, "w") as f:
+        json.dump(report, f, indent=2)
+
+
+def format_report(report: Dict) -> str:
+    """Human-readable fidelity table (per-backend percentiles + the
+    headline engine-vs-sim deltas)."""
+    lines = []
+
+    def f(v):
+        return f"{v:8.3f}" if v is not None else "       -"
+    for name, rep in report["backends"].items():
+        lines.append(
+            f"{name:>7s}  n={rep['completed']:<3d} "
+            f"e2e p50/p95={f(rep['e2e']['p50'])}{f(rep['e2e']['p95'])}  "
+            f"ttft p95={f(rep['ttft']['p95'])}  "
+            f"tbt p95={f(rep['tbt']['p95'])}  "
+            f"preempt={rep['preemptions']}")
+    for pair, d in report["deltas"].items():
+        e95 = d["e2e"]["p95"]["rel"]
+        t95 = d["ttft"]["p95"]["rel"]
+        lines.append(f"{pair:>16s}: e2e p95 rel delta="
+                     f"{e95:+.3f}" if e95 is not None else
+                     f"{pair:>16s}: e2e p95 rel delta=-")
+        if t95 is not None:
+            lines[-1] += f"  ttft p95 rel delta={t95:+.3f}"
+    return "\n".join(lines)

@@ -264,6 +264,17 @@ class GatewayConfig:
     # autoscaling: evaluate ``scale_up_when(shed_rate, p95_e2e)`` each
     # tick and add an instance at most once per ``scale_window``
     scale_window: float = 60.0
+    # per-tenant admission quotas / weighted-fair shedding.  With
+    # ``tenant_weights`` set, a full queue no longer sheds whoever
+    # happens to arrive: each tenant's fair share of the bounded queue
+    # is queue_cap * w_t / sum(w), and at saturation the request shed
+    # is taken from the tenant MOST over its share -- evicting the
+    # newest queued request of an over-share tenant to admit an
+    # under-share arrival.  Tenants absent from the dict get
+    # ``default_tenant_weight``.  None (default) keeps the old
+    # tenant-blind behaviour.
+    tenant_weights: Optional[Dict[str, float]] = None
+    default_tenant_weight: float = 1.0
 
 
 class Gateway:
@@ -298,6 +309,10 @@ class Gateway:
         self._overflow: deque = deque()
         self._overflow_deadlines = False   # any deferred req has one?
         self._n_admitted = 0
+        # per-tenant occupancy of the bounded admission queue (the
+        # weighted-fair share bookkeeping; maintained even without
+        # tenant_weights -- it is two dict ops per request)
+        self._q_tenant: Dict[str, int] = {}
 
     # -- admission / backpressure --------------------------------------
     def _queue_full(self) -> bool:
@@ -308,7 +323,7 @@ class Gateway:
         if self.cfg.default_deadline_s is not None \
                 and req.deadline is None:
             req.deadline = req.arrival + self.cfg.default_deadline_s
-        if self._queue_full():
+        if self._queue_full() and not self._fair_evict_for(req):
             if self.cfg.on_full == "shed":
                 req.phase = Phase.SHED
                 self.shed.append(req)
@@ -320,7 +335,81 @@ class Gateway:
             return
         self.cluster.enqueue(req)
         self._n_admitted += 1
+        self._q_tenant[req.tenant] = \
+            self._q_tenant.get(req.tenant, 0) + 1
         self.metrics.on_admit(req.tenant)
+
+    # -- weighted-fair shedding ----------------------------------------
+    def _tenant_weight(self, tenant: str) -> float:
+        w = self.cfg.tenant_weights
+        return w.get(tenant, self.cfg.default_tenant_weight) if w \
+            else self.cfg.default_tenant_weight
+
+    def _fair_evict_for(self, req: Request) -> bool:
+        """At saturation, try to make room for ``req`` by evicting the
+        newest queued request of the tenant most over its weighted fair
+        share.  Returns True if a slot was freed; False means the
+        arrival itself is the (equal-)worst offender and takes the
+        shed/defer as before.  No-op without ``tenant_weights``.
+
+        Shares are computed over the tenants currently OCCUPYING the
+        queue (plus the arrival): tenants that appeared once and went
+        idle must not keep diluting everyone else's entitlement."""
+        if self.cfg.tenant_weights is None:
+            return False
+        cap = self.cfg.queue_cap
+        tenants = {t for t, n in self._q_tenant.items() if n > 0}
+        tenants.add(req.tenant)
+        total_w = sum(self._tenant_weight(t) for t in tenants)
+        if total_w <= 0:
+            return False
+
+        def over(tenant: str, occupancy: int) -> float:
+            share = cap * self._tenant_weight(tenant) / total_w
+            return occupancy - share
+        over_arrival = over(req.tenant,
+                            self._q_tenant.get(req.tenant, 0) + 1)
+        victim_tenant = None
+        worst = over_arrival
+        for t in tenants:
+            n = self._q_tenant.get(t, 0)
+            if n > 0 and t != req.tenant and over(t, n) > worst:
+                worst = over(t, n)
+                victim_tenant = t
+        if victim_tenant is None:
+            return False
+        return self._evict_newest(victim_tenant)
+
+    def _evict_newest(self, tenant: str) -> bool:
+        """Push the newest queued (not yet routed) request of a tenant
+        back out of the central queue: shed under ``on_full="shed"``,
+        returned to the client-side overflow under ``"defer"`` (defer
+        mode stays lossless -- the displaced request retries like any
+        deferred arrival)."""
+        central = self.cluster.central
+        victim = None
+        for r in reversed(central):
+            if r.tenant == tenant:
+                victim = r
+                break
+        if victim is None:
+            return False
+        central.remove(victim)
+        self._n_admitted -= 1
+        self._q_tenant[tenant] -= 1
+        if self._q_tenant[tenant] == 0:
+            del self._q_tenant[tenant]      # bound the dict's growth
+        if self.cfg.on_full == "shed":
+            victim.phase = Phase.SHED
+            self.shed.append(victim)
+            self.metrics.on_evict(tenant)
+        else:
+            victim.phase = Phase.QUEUED
+            self._overflow.append(victim)
+            if victim.deadline is not None:
+                self._overflow_deadlines = True
+            self.metrics.on_evict(tenant, shed=False)
+        return True
 
     def _cancel_expired(self):
         """Client timeouts: deferred requests whose deadline has passed
@@ -347,6 +436,8 @@ class Gateway:
             req = self._overflow.popleft()
             self.cluster.enqueue(req)
             self._n_admitted += 1
+            self._q_tenant[req.tenant] = \
+                self._q_tenant.get(req.tenant, 0) + 1
             self.metrics.on_admit(req.tenant)
 
     def _maybe_scale_up(self):
@@ -397,6 +488,9 @@ class Gateway:
                 deferred = False
             if deferred:
                 return
+            self._q_tenant[head.tenant] -= 1
+            if self._q_tenant[head.tenant] == 0:
+                del self._q_tenant[head.tenant]
             cluster.route(a)
 
     # -- serving loop --------------------------------------------------
@@ -441,6 +535,8 @@ class Gateway:
                 break
         if getattr(cluster, "is_vec", False):
             cluster.sync_all()   # in-flight requests on truncated runs
+            for r in self.shed:
+                r.phase = Phase.SHED   # fair-evicted: arena says QUEUED
         stats = summarize(requests)
         stats["preemptions"] = sum(r.preemptions for r in requests)
         stats["shed"] = len(self.shed)

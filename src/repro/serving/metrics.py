@@ -230,6 +230,18 @@ class StreamMetrics:
         self._all.cancelled += 1
         self._tenant(tenant).cancelled += 1
 
+    def on_evict(self, tenant: str = "default", shed: bool = True):
+        """Weighted-fair eviction pushed an already-admitted request
+        back out of the bounded queue.  ``shed=True`` moves it from the
+        admitted to the shed column; ``shed=False`` (defer mode: the
+        request returns to the client overflow and will be re-admitted)
+        only reverses the admit, so offered = admitted + shed keeps
+        counting each request exactly once either way."""
+        for st in (self._all, self._tenant(tenant)):
+            st.admitted -= 1
+            if shed:
+                st.shed += 1
+
     def on_complete(self, req: Request, tenant: str = "default"):
         now = req.finished if req.finished is not None else 0.0
         ok = self.slo.attained(req)
@@ -261,7 +273,40 @@ class StreamMetrics:
         out = self._report_one(self._all, now)
         out["tenants"] = {t: self._report_one(st, now)
                           for t, st in sorted(self._tenants.items())}
+        # per-tenant shed burden: the tenant's share of all shedding
+        # over its share of all offered traffic.  1.0 = sheds in
+        # proportion to its traffic; > 1 absorbs more than its share
+        # (the weighted-fair queue pushes burden onto over-share
+        # tenants and drives protected tenants toward 0).
+        tot_shed = sum(st.shed for st in self._tenants.values())
+        tot_off = sum(st.admitted + st.shed
+                      for st in self._tenants.values())
+        for t, st in self._tenants.items():
+            offered = st.admitted + st.shed
+            if tot_shed and offered and tot_off:
+                out["tenants"][t]["shed_burden"] = \
+                    (st.shed / tot_shed) / (offered / tot_off)
+            else:
+                out["tenants"][t]["shed_burden"] = None
+        out["shed_fairness"] = self.shed_fairness()
         return out
+
+    def shed_fairness(self) -> Optional[float]:
+        """Jain's fairness index over per-tenant admit rates
+        (admitted / offered): 1.0 means every tenant saw the same
+        admission probability, 1/n means one tenant absorbed all the
+        shedding.  The per-tenant shed-fairness signal the weighted-fair
+        queue is judged by (None until any tenant has offered load)."""
+        rates = []
+        for st in self._tenants.values():
+            offered = st.admitted + st.shed
+            if offered:
+                rates.append(st.admitted / offered)
+        if not rates:
+            return None
+        x = np.array(rates, float)
+        denom = len(x) * float((x ** 2).sum())
+        return float(x.sum()) ** 2 / denom if denom else 1.0
 
 
 def format_snapshot(snap: Dict) -> str:

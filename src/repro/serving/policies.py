@@ -122,7 +122,8 @@ class RLPolicy:
             s = state_lib.featurize(
                 cluster, cluster.profile, n_buckets=cfg.n_buckets,
                 include_impact=cfg.include_impact_features,
-                predict_decode=lambda r: d_hat, alpha=cfg.alpha)
+                predict_decode=lambda r: d_hat, alpha=cfg.alpha,
+                include_hardware=cfg.include_hardware_features)
             prior = w_sel * bonus if w_sel else None
             return int(self.agent.act(
                 s, mask, epsilon=0.0, prior=prior,

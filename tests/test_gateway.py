@@ -379,3 +379,128 @@ def test_trend_gate_flags_missing_rows():
     cur["results"][0]["rows"] = []
     bad, _ = compare(cur, _report())
     assert any("missing" in r for r in bad)
+
+
+# -- per-tenant quotas / weighted-fair shedding -------------------------------
+
+def _burst_stream(n_bursts=30, flood=14, queue_align=0.0145):
+    """Adversarial timing: tenant 'flood' fills the bounded queue in
+    bursts; tenant 'light' always arrives in the same tick, after the
+    flood -- the worst case for tenant-blind shedding."""
+    from repro.serving.request import Request
+    reqs = []
+    for burst in range(n_bursts):
+        t = burst * 2.0
+        for i in range(flood):
+            reqs.append(Request(prompt_tokens=300, decode_tokens=400,
+                                arrival=t + i * 0.001, tenant="flood"))
+        reqs.append(Request(prompt_tokens=80, decode_tokens=60,
+                            arrival=t + queue_align, tenant="light"))
+    return reqs
+
+
+def _run_quota_gateway(weights, backend="py"):
+    gw = Gateway(GatewayConfig(queue_cap=8, on_full="shed",
+                               tenant_weights=weights, backend=backend),
+                 (PROF,) * 2, make_gateway_policy("rr"))
+    stats = gw.run(_burst_stream())
+    return gw, stats
+
+
+def test_weighted_fair_shed_protects_under_share_tenant():
+    """Blind shedding punishes whoever arrives at saturation (here: the
+    light tenant, 100% shed); weighted-fair eviction sheds the tenant
+    most over its queue share instead."""
+    _, blind = _run_quota_gateway(None)
+    _, fair = _run_quota_gateway({"flood": 1.0, "light": 1.0})
+    b_light = blind["snapshot"]["tenants"]["light"]
+    f_light = fair["snapshot"]["tenants"]["light"]
+    assert b_light["admitted"] == 0          # blind: always shed
+    assert f_light["shed"] == 0              # fair: fully protected
+    assert fair["snapshot"]["shed_fairness"] \
+        > blind["snapshot"]["shed_fairness"]
+    # the shed burden moved onto the over-share tenant
+    assert f_light["shed_burden"] == 0.0
+    assert fair["snapshot"]["tenants"]["flood"]["shed_burden"] > 1.0
+    # books balance under eviction accounting (offered counted once)
+    n = len(_burst_stream())
+    for stats in (blind, fair):
+        assert stats["admitted"] + stats["shed"] == n
+        snap = stats["snapshot"]
+        assert sum(d["shed"] for d in snap["tenants"].values()) \
+            == stats["shed"]
+        assert sum(d["admitted"] for d in snap["tenants"].values()) \
+            == stats["admitted"]
+
+
+def test_fair_shed_respects_weights():
+    """A zero-weight tenant is entitled to nothing: it gets no
+    protection (its own arrivals shed at saturation) and never evicts
+    the weighted tenant."""
+    _, fair = _run_quota_gateway({"flood": 1.0, "light": 0.0})
+    light = fair["snapshot"]["tenants"]["light"]
+    assert light["admitted"] == 0
+
+
+def test_fair_shed_on_vec_backend_matches_py():
+    _, py = _run_quota_gateway({"flood": 1.0, "light": 1.0},
+                               backend="py")
+    gw_vec, vec = _run_quota_gateway({"flood": 1.0, "light": 1.0},
+                                     backend="vec")
+    assert vec["shed"] == py["shed"]
+    assert vec["admitted"] == py["admitted"]
+    assert vec["snapshot"]["shed_fairness"] == pytest.approx(
+        py["snapshot"]["shed_fairness"])
+    from repro.serving.request import Phase
+    for r in gw_vec.shed:            # evicted requests stay SHED after
+        assert r.phase is Phase.SHED  # the end-of-run arena sync
+
+
+def test_no_weights_preserves_blind_behaviour():
+    """tenant_weights=None must reproduce the pre-quota gateway
+    decision for decision (no eviction machinery in the path)."""
+    scn_a, scn_b = _scenario(seed=9, rate=40.0), _scenario(seed=9,
+                                                           rate=40.0)
+    gw_a = Gateway(GatewayConfig(queue_cap=4, on_full="shed"),
+                   (PROF,) * 2, make_gateway_policy("rr"))
+    gw_b = Gateway(GatewayConfig(queue_cap=4, on_full="shed",
+                                 tenant_weights=None),
+                   (PROF,) * 2, make_gateway_policy("rr"))
+    a, b = gw_a.run(scn_a), gw_b.run(scn_b)
+    assert a["shed"] == b["shed"] and a["admitted"] == b["admitted"]
+
+
+def test_shed_fairness_index_bounds_and_none():
+    m = StreamMetrics()
+    assert m.shed_fairness() is None         # no tenants yet
+    m.on_admit("a")
+    m.on_admit("b")
+    assert m.shed_fairness() == pytest.approx(1.0)
+    for _ in range(9):
+        m.on_shed("b")
+    fairness = m.shed_fairness()
+    assert 0.0 < fairness < 1.0
+    snap = m.snapshot(0.0)
+    assert snap["shed_fairness"] == pytest.approx(fairness)
+    assert snap["tenants"]["a"]["shed_burden"] == 0.0
+    assert snap["tenants"]["b"]["shed_burden"] > 1.0
+
+
+def test_fair_evict_in_defer_mode_is_lossless():
+    """Defer mode must never lose a request, with or without fair
+    eviction: a displaced victim returns to the client overflow and is
+    re-admitted when the queue drains."""
+    reqs = _burst_stream()
+    gw = Gateway(GatewayConfig(queue_cap=8, on_full="defer",
+                               tenant_weights={"flood": 1.0,
+                                               "light": 1.0}),
+                 (PROF,) * 2, make_gateway_policy("rr"))
+    stats = gw.run(reqs)
+    assert stats["shed"] == 0
+    assert stats["admitted"] == len(reqs)
+    assert stats["n"] == len(reqs)          # all served
+    # metrics admit-reversal kept offered counts exact
+    snap = stats["snapshot"]
+    assert snap["admitted"] == len(reqs)
+    # queue-occupancy bookkeeping fully drained (keys pruned at zero)
+    assert gw._q_tenant == {}

@@ -158,6 +158,70 @@ def test_featurize_bit_exact_against_python_stepper():
     assert done
 
 
+def test_featurize_hardware_block_bit_exact_and_hetero():
+    """The optional per-instance hardware block (grad1/grad2/capacity)
+    must be bit-identical between the scalar and vec featurize paths,
+    distinguish mixed hardware, and zero out on failed instances."""
+    profs = (PROF, A100_LLAMA31_8B, PROF)
+    cfg = rl.RouterConfig(variant="guided", n_instances=3,
+                          q_arch="decomposed", seed=0,
+                          include_hardware_features=True)
+    env_p = rl.RoutingEnv(cfg, profs)
+    env_v = rl.RoutingEnv(cfg, profs, sim_backend="vec")
+    s_p = env_p.reset(_reqs(50, seed=5))
+    s_v = env_v.reset(_reqs(50, seed=5))
+    dims = state_lib.instance_dims(True, True)
+    assert s_p.shape[0] == state_lib.state_dim(3, True, True)
+    hb = state_lib.INSTANCE_DIMS + 1
+    # V100 block vs A100 block carry their own calibration constants
+    v100 = s_p[hb:hb + 3]
+    a100 = s_p[dims + hb:dims + hb + 3]
+    np.testing.assert_allclose(
+        v100, [PROF.grad1 * state_lib.HW_G1_SCALE,
+               PROF.grad2 * state_lib.HW_G2_SCALE,
+               PROF.capacity_tokens * state_lib.HW_CAP_SCALE],
+        rtol=1e-7)
+    assert not np.array_equal(v100, a100)
+    done, steps = False, 0
+    while not done and steps < 200:
+        np.testing.assert_array_equal(s_p, s_v)
+        a = (int(np.argmax(env_p.guidance_bonus()[:3]))
+             if env_p.cluster.central else 3)
+        s_p, _, done, _ = env_p.step(a)
+        s_v, _, done_v, _ = env_v.step(a)
+        assert done == done_v
+        steps += 1
+    assert done
+    # failed instance: the whole block (hardware included) reads zero
+    env_p.cluster.fail_instance(1)
+    s_fail = env_p._state()
+    np.testing.assert_array_equal(s_fail[dims:2 * dims],
+                                  np.zeros(dims, np.float32))
+
+
+def test_featurize_vec_many_hardware_matches_single():
+    pool = VecSimPool(2)
+    cfg = rl.RouterConfig(variant="guided", n_instances=2, seed=0,
+                          include_hardware_features=True)
+    profs = (PROF, A100_LLAMA31_8B)
+    envs = [rl.RoutingEnv(cfg, profs, pool=pool, pool_ep=i)
+            for i in range(2)]
+    for i, env in enumerate(envs):
+        env.reset(_reqs(30, seed=20 + i))
+    for _ in range(25):
+        for env in envs:
+            a = (int(np.argmax(env.guidance_bonus()[:env.cluster.m]))
+                 if env.cluster.central else env.cluster.m)
+            env.step(a)
+        many = state_lib.featurize_vec_many(
+            [e.cluster for e in envs], [e.profile for e in envs],
+            [e.predict_decode for e in envs],
+            n_buckets=cfg.n_buckets, include_impact=True,
+            alpha=cfg.alpha, include_hardware=True)
+        for env, got in zip(envs, many):
+            np.testing.assert_array_equal(got, env._state())
+
+
 def test_backlog_accounting_drains_to_zero_on_vec():
     cfg = rl.RouterConfig(variant="guided", n_instances=2, seed=0)
     env = rl.RoutingEnv(cfg, PROF, sim_backend="vec")
