@@ -34,6 +34,7 @@ MODULES = [
     ("fig5", "benchmarks.bench_fig5_metrics"),
     ("table3", "benchmarks.bench_table3_chunking"),
     ("scale_trace", "benchmarks.bench_scale_trace"),
+    ("prefix_cache", "benchmarks.bench_prefix_cache"),
     ("roofline", "benchmarks.bench_roofline"),
 ]
 

@@ -136,6 +136,12 @@ def compare(current: dict, baseline: dict, tol: float = 0.35,
                 regressions.append(
                     f"{key}: {metric} {base_v:g} -> {cur_v:g} "
                     f"(band +-{band:g}, {d}er is better)")
+        for metric in cur_m:
+            # new metric on a known row: report, never fail -- the
+            # gate only defends what the baseline records
+            if metric not in base_m:
+                notes.append(f"{key}: new metric {metric} "
+                             "(not in baseline)")
     for key in cur_r:
         if key not in base_r:
             notes.append(f"row {key}: new (not in baseline)")

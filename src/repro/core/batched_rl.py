@@ -116,7 +116,7 @@ class _Slot:
         m = self.env.m
         self.s_pad = state_lib.pad_state(
             s, m, m_max, cfg.include_impact_features,
-            cfg.include_hardware_features)
+            cfg.include_hardware_features, cfg.include_cache_features)
         self.mask_pad = state_lib.pad_mask(self.env.mask(), m, m_max)
 
     def prior_pad(self, m_max: int) -> Optional[np.ndarray]:
@@ -302,7 +302,8 @@ def train_batched(cfg: rl.RouterConfig,
                 n_buckets=cfg.n_buckets,
                 include_impact=cfg.include_impact_features,
                 alpha=cfg.alpha,
-                include_hardware=cfg.include_hardware_features)
+                include_hardware=cfg.include_hardware_features,
+                include_cache=cfg.include_cache_features)
         for i, sl in enumerate(slots):
             a_pad = int(acts[i])
             s_prev_pad = sl.s_pad

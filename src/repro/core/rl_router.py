@@ -25,7 +25,7 @@ from typing import Callable, Dict, Optional, Sequence
 
 import numpy as np
 
-from repro.core import impact, state as state_lib
+from repro.core import impact, prefix_cache, state as state_lib
 from repro.core.dqn import DQNAgent, DQNConfig
 from repro.core.profiles import HardwareProfile
 from repro.core.simulator import Cluster
@@ -60,6 +60,18 @@ class RouterConfig:
     # inferring speed from load dynamics.  Off by default: existing
     # checkpoints keep their state shape.
     include_hardware_features: bool = False
+    # prefix-cache model (core.prefix_cache): per-instance KV budget
+    # for cached prompt prefixes (0 disables the cache model).  With
+    # ``include_cache_features`` the head request's prospective
+    # per-instance hit fraction joins the state (CACHE_DIMS extra dims
+    # per instance -- existing checkpoints keep their shape while it is
+    # off); ``cache_weight`` adds the same affinity signal directly to
+    # mixing_scores so the guided variant's heuristic prior is
+    # cache-aware too.
+    include_cache_features: bool = False
+    prefix_cache_tokens: int = 0
+    prefix_block: int = 32
+    cache_weight: float = 0.0
     reward_scale: float = 300.0
     q_squash: float = 0.05       # bound on Q's selection influence (guided)
     q_arch: str = "mlp"              # "mlp" (paper) | "decomposed" (ours)
@@ -99,11 +111,16 @@ class RouterConfig:
 
 
 def mixing_scores(cluster, req: Request, d_hat: int,
-                  alpha: float = 0.5) -> np.ndarray:
+                  alpha: float = 0.5,
+                  cache_weight: float = 0.0) -> np.ndarray:
     """Per-instance r_mixing for routing ``req`` onto ``cluster`` now
     (each instance judged by its own profile; failed instances -inf).
     Shared by the RL env, the cluster manager, and the gateway's
-    policy layer -- one implementation of the paper's Eq. 1-2 scoring."""
+    policy layer -- one implementation of the paper's Eq. 1-2 scoring.
+    ``cache_weight`` adds the request's prospective prefix-cache hit
+    fraction per instance (core.prefix_cache), making the heuristic
+    cache-affine; the fractions come from the same shared scalar query
+    on both backends, so scores stay bit-identical py-vs-vec."""
     if getattr(cluster, "is_vec", False):
         # vecsim backend: Eq. 1-2 evaluated in one vector pass over the
         # packed lane arrays (bit-identical to the scalar loop)
@@ -113,15 +130,19 @@ def mixing_scores(cluster, req: Request, d_hat: int,
             float(req.prompt_tokens), d_hat,
             pool.rts[lanes] + pool.qps[lanes], alpha)
         scores[pool.failed[lanes]] = -np.inf
-        return scores
-    sums = [inst.resident_token_sum() + inst.queued_prompt_sum()
-            for inst in cluster.instances]
-    scores = impact.mixing_heterogeneous(
-        [inst.profile for inst in cluster.instances],
-        req.prompt_tokens, d_hat, sums, alpha)
-    for i, inst in enumerate(cluster.instances):
-        if inst.failed:
-            scores[i] = -np.inf
+    else:
+        sums = [inst.resident_token_sum() + inst.queued_prompt_sum()
+                for inst in cluster.instances]
+        scores = impact.mixing_heterogeneous(
+            [inst.profile for inst in cluster.instances],
+            req.prompt_tokens, d_hat, sums, alpha)
+        for i, inst in enumerate(cluster.instances):
+            if inst.failed:
+                scores[i] = -np.inf
+    if cache_weight:
+        # failed lanes stay -inf (-inf + finite == -inf)
+        scores = scores + cache_weight * np.asarray(
+            prefix_cache.hit_fractions(cluster, req))
     return scores
 
 
@@ -187,15 +208,19 @@ class RoutingEnv:
         c = self.cfg
         if self._pool is not None:
             from repro.core.vecsim import VecCluster
-            self.cluster = VecCluster(self.profiles, self.m,
-                                      c.scheduler, c.dt,
-                                      c.chunked_prefill, c.n_slots,
-                                      pool=self._pool,
-                                      ep=self._pool_ep)
+            self.cluster = VecCluster(
+                self.profiles, self.m, c.scheduler, c.dt,
+                c.chunked_prefill, c.n_slots, pool=self._pool,
+                ep=self._pool_ep,
+                prefix_cache_tokens=c.prefix_cache_tokens,
+                prefix_block=c.prefix_block)
         else:
-            self.cluster = Cluster(self.profiles, self.m, c.scheduler,
-                                   c.dt, c.chunked_prefill, c.n_slots,
-                                   backend=self.sim_backend)
+            self.cluster = Cluster(
+                self.profiles, self.m, c.scheduler, c.dt,
+                c.chunked_prefill, c.n_slots,
+                backend=self.sim_backend,
+                prefix_cache_tokens=c.prefix_cache_tokens,
+                prefix_block=c.prefix_block)
         self._vec = getattr(self.cluster, "is_vec", False)
         self.pending = sorted(requests, key=lambda r: r.arrival)
         self.n_total = len(self.pending)
@@ -266,7 +291,8 @@ class RoutingEnv:
             self.cluster, self.profile, n_buckets=self.cfg.n_buckets,
             include_impact=self.cfg.include_impact_features,
             predict_decode=self.predict_decode, alpha=self.cfg.alpha,
-            include_hardware=self.cfg.include_hardware_features)
+            include_hardware=self.cfg.include_hardware_features,
+            include_cache=self.cfg.include_cache_features)
 
     def mask(self) -> np.ndarray:
         return state_lib.action_mask(self.cluster)
@@ -281,7 +307,8 @@ class RoutingEnv:
         if self._score_cache is not None and self._score_cache[0] == key:
             return self._score_cache[1]
         d_hat = max(self.predict_decode(req), 1)
-        scores = mixing_scores(cluster, req, d_hat, self.cfg.alpha)
+        scores = mixing_scores(cluster, req, d_hat, self.cfg.alpha,
+                               cache_weight=self.cfg.cache_weight)
         self._score_cache = (key, scores)
         return scores
 
@@ -432,10 +459,12 @@ def make_agent(cfg: RouterConfig, m: Optional[int] = None) -> DQNAgent:
     cfg.n_instances; the batched runner passes its padded width m_max)."""
     m = m or cfg.n_instances
     inst_dims = state_lib.instance_dims(cfg.include_impact_features,
-                                        cfg.include_hardware_features)
+                                        cfg.include_hardware_features,
+                                        cfg.include_cache_features)
     dcfg = DQNConfig(
         state_dim=state_lib.state_dim(m, cfg.include_impact_features,
-                                      cfg.include_hardware_features),
+                                      cfg.include_hardware_features,
+                                      cfg.include_cache_features),
         n_actions=m + 1, hidden=cfg.hidden,
         gamma=cfg.gamma, lr=cfg.lr, q_arch=cfg.q_arch,
         inst_dims=inst_dims, router_dims=state_lib.ROUTER_DIMS,

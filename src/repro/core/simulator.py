@@ -17,6 +17,7 @@ from __future__ import annotations
 from collections import deque
 from typing import Dict, List, Optional, Sequence
 
+from repro.core.prefix_cache import PrefixCache
 from repro.core.profiles import HardwareProfile
 from repro.serving.request import Phase, Request
 from repro.serving.scheduler import InstanceScheduler, get_scheduler
@@ -25,12 +26,19 @@ from repro.serving.scheduler import InstanceScheduler, get_scheduler
 class SimInstance:
     def __init__(self, profile: HardwareProfile,
                  scheduler: InstanceScheduler, instance_id: int = 0,
-                 chunked_prefill: int = 0, n_slots: Optional[int] = None):
+                 chunked_prefill: int = 0, n_slots: Optional[int] = None,
+                 prefix_cache_tokens: int = 0, prefix_block: int = 32):
         self.profile = profile
         self.scheduler = scheduler
         self.instance_id = instance_id
         self.chunk = chunked_prefill
         self.n_slots = n_slots or profile.max_batch
+        # prefix/KV cache model (0 tokens = disabled -- the paper's
+        # baseline setup): admitted requests whose prompt hash-chain
+        # shares a cached prefix start with ``prefilled = cached``
+        self.prefix_cache = (PrefixCache(prefix_cache_tokens,
+                                         prefix_block)
+                             if prefix_cache_tokens > 0 else None)
         self.residents: List[Request] = []      # decoding or chunk-prefilling
         self.queue: deque = deque()
         self.clock = 0.0
@@ -134,6 +142,16 @@ class SimInstance:
                 req.admitted_idx = self._admit_seq
                 self._admit_seq += 1
                 self.residents.append(req)
+                if self.prefix_cache is not None and req.prefix_hashes:
+                    # longest-prefix hit: the cached part of the prompt
+                    # is already prefilled (counts as resident context
+                    # but never enters the prefill loop); the prompt's
+                    # own chain becomes resident for later arrivals
+                    cached = self.prefix_cache.admit(req.prompt_tokens,
+                                                     req.prefix_hashes)
+                    req.prefilled = cached
+                    req.cached_prefix = cached
+                    self._out -= cached
                 self._rts += req.prefilled + req.decoded
                 rts = self._rts
         # prefill progress (full, or one chunk per iteration)
@@ -174,6 +192,10 @@ class SimInstance:
                 self.completed.append(r)
                 done.append(r)
                 rts -= r.prefilled + r.decoded
+                if self.prefix_cache is not None and r.full_hashes:
+                    # the finished conversation's KV (prompt + reply)
+                    # stays cached: the follow-up turn extends it
+                    self.prefix_cache.insert(r.full_hashes)
         if done:
             self.residents = [r for r in self.residents
                               if r.phase is not Phase.DONE]
@@ -199,6 +221,8 @@ class SimInstance:
         self.failed = True
         orphans = list(self.residents) + list(self.queue)
         self.residents, self.queue = [], deque()
+        if self.prefix_cache is not None:
+            self.prefix_cache.clear()   # the KV pool dies with the node
         self._rts = 0.0
         self._qps = 0.0
         self._out = 0.0
@@ -232,18 +256,22 @@ class Cluster:
     def __new__(cls, profile=None, n_instances: int = 0,
                 scheduler: str = "fcfs", dt: float = 0.02,
                 chunked_prefill: int = 0,
-                n_slots: Optional[int] = None, backend: str = "py"):
+                n_slots: Optional[int] = None, backend: str = "py",
+                prefix_cache_tokens: int = 0, prefix_block: int = 32):
         if cls is Cluster and backend == "vec":
             from repro.core.vecsim import VecCluster
             # not a Cluster subclass, so __init__ below is not re-run
             return VecCluster(profile, n_instances, scheduler, dt,
-                              chunked_prefill, n_slots)
+                              chunked_prefill, n_slots,
+                              prefix_cache_tokens=prefix_cache_tokens,
+                              prefix_block=prefix_block)
         return super().__new__(cls)
 
     def __init__(self, profile, n_instances: int,
                  scheduler: str = "fcfs", dt: float = 0.02,
                  chunked_prefill: int = 0,
-                 n_slots: Optional[int] = None, backend: str = "py"):
+                 n_slots: Optional[int] = None, backend: str = "py",
+                 prefix_cache_tokens: int = 0, prefix_block: int = 32):
         if isinstance(profile, HardwareProfile):
             profiles = [profile] * n_instances
         else:
@@ -254,9 +282,13 @@ class Cluster:
         self.profile = profiles[0]
         self.profiles = tuple(profiles)
         self.dt = dt
+        self._prefix_cache_tokens = prefix_cache_tokens
+        self._prefix_block = prefix_block
         self.instances = [
             SimInstance(profiles[i], get_scheduler(scheduler), i,
-                        chunked_prefill, n_slots)
+                        chunked_prefill, n_slots,
+                        prefix_cache_tokens=prefix_cache_tokens,
+                        prefix_block=prefix_block)
             for i in range(n_instances)]
         self.central: deque = deque()
         self.t = 0.0
@@ -295,7 +327,9 @@ class Cluster:
                      profile: Optional[HardwareProfile] = None) -> int:
         """Elastic scale-out (optionally with a different hardware tier)."""
         inst = SimInstance(profile or self.profile, get_scheduler(scheduler),
-                           len(self.instances), chunked_prefill)
+                           len(self.instances), chunked_prefill,
+                           prefix_cache_tokens=self._prefix_cache_tokens,
+                           prefix_block=self._prefix_block)
         inst.clock = self.t
         # inherit cluster-level observer hooks (the RL env's incremental
         # backlog accounting must see the new instance's decode events)

@@ -47,19 +47,26 @@ HW_G1_SCALE = 1e3       # grad1 ~3.2e-4 (V100) -> 0.32
 HW_G2_SCALE = 1e4       # grad2 ~3.3e-5 (V100) -> 0.33
 HW_CAP_SCALE = 1e-5     # capacity 60k (A100)  -> 0.60
 
+# per-instance prefix-cache block (optional): the head request's
+# prospective hit fraction on this instance -- already in [0, 1]
+CACHE_DIMS = 1
+
 _E0, _E1 = BUCKET_EDGES
 
 
 def instance_dims(include_impact: bool = True,
-                  include_hardware: bool = False) -> int:
+                  include_hardware: bool = False,
+                  include_cache: bool = False) -> int:
     return (INSTANCE_DIMS + (1 if include_impact else 0)
-            + (HW_DIMS if include_hardware else 0))
+            + (HW_DIMS if include_hardware else 0)
+            + (CACHE_DIMS if include_cache else 0))
 
 
 def state_dim(m: int, include_impact: bool = True,
-              include_hardware: bool = False) -> int:
-    return instance_dims(include_impact, include_hardware) * m \
-        + ROUTER_DIMS
+              include_hardware: bool = False,
+              include_cache: bool = False) -> int:
+    return instance_dims(include_impact, include_hardware,
+                         include_cache) * m + ROUTER_DIMS
 
 
 def featurize(cluster: Cluster, profile: HardwareProfile,
@@ -67,18 +74,21 @@ def featurize(cluster: Cluster, profile: HardwareProfile,
               n_buckets: int = 8, include_impact: bool = True,
               predict_decode: Optional[Callable] = None,
               alpha: float = 0.5,
-              include_hardware: bool = False) -> np.ndarray:
+              include_hardware: bool = False,
+              include_cache: bool = False) -> np.ndarray:
     if getattr(cluster, "is_vec", False):
         # vecsim backend: read the packed per-slot arrays directly
         # (bit-identical features, no Python object scans)
         return _featurize_vec(cluster, profile, predict_bucket,
                               n_buckets, include_impact,
-                              predict_decode, alpha, include_hardware)
+                              predict_decode, alpha, include_hardware,
+                              include_cache)
     # Featurization runs once per router decision; it is written as a
     # single pass of scalar Python per instance because numpy call
     # overhead dominates at these sizes (a handful of residents).
     head = cluster.central[0] if cluster.central else None
-    dims = instance_dims(include_impact, include_hardware)
+    dims = instance_dims(include_impact, include_hardware,
+                         include_cache)
     feats = [0.0] * (dims * cluster.m + ROUTER_DIMS)
     if include_impact and head is not None:
         d_hat = (predict_decode(head) if predict_decode
@@ -141,6 +151,16 @@ def featurize(cluster: Cluster, profile: HardwareProfile,
             feats[hb + 1] = 1.0 if g2 > 1.0 else g2
             cp = prof.capacity_tokens * HW_CAP_SCALE
             feats[hb + 2] = 1.0 if cp > 1.0 else cp
+        if include_cache and head is not None \
+                and getattr(head, "prefix_hashes", None):
+            # prospective hit fraction of the head request on this
+            # instance (read-only query; 0 when the cache model is off)
+            pc = getattr(inst, "prefix_cache", None)
+            if pc is not None:
+                cb = base + INSTANCE_DIMS + (1 if include_impact else 0) \
+                    + (HW_DIMS if include_hardware else 0)
+                feats[cb] = pc.hit_fraction(head.prompt_tokens,
+                                            head.prefix_hashes)
     feats[dims * cluster.m] = min(len(cluster.central), 512) / 512.0
     if head is not None:
         if head.predicted_bucket is not None:
@@ -160,20 +180,23 @@ def featurize(cluster: Cluster, profile: HardwareProfile,
 def _featurize_vec(cluster, profile: HardwareProfile,
                    predict_bucket, n_buckets: int, include_impact: bool,
                    predict_decode, alpha: float,
-                   include_hardware: bool = False) -> np.ndarray:
+                   include_hardware: bool = False,
+                   include_cache: bool = False) -> np.ndarray:
     """Featurize straight from a VecCluster's packed structure-of-arrays
     state -- the single-cluster view of :func:`featurize_vec_many`."""
     return featurize_vec_many(
         [cluster], [profile], [predict_decode], n_buckets=n_buckets,
         include_impact=include_impact, alpha=alpha,
         predict_buckets=[predict_bucket],
-        include_hardware=include_hardware)[0]
+        include_hardware=include_hardware,
+        include_cache=include_cache)[0]
 
 
 def featurize_vec_many(clusters, profiles, predict_decodes,
                        n_buckets: int = 8, include_impact: bool = True,
                        alpha: float = 0.5, predict_buckets=None,
-                       include_hardware: bool = False):
+                       include_hardware: bool = False,
+                       include_cache: bool = False):
     """Featurize MANY VecClusters sharing one pool in a single
     vectorized pass over the concatenated lane set (the batched
     trainer's per-round state build: one set of matrix ops instead of
@@ -186,7 +209,8 @@ def featurize_vec_many(clusters, profiles, predict_decodes,
     n = lanes_cat.size
     hw = pool._hw
     heads = [c.central[0] if c.central else None for c in clusters]
-    dims = instance_dims(include_impact, include_hardware)
+    dims = instance_dims(include_impact, include_hardware,
+                         include_cache)
     occ = pool.s_state[:, :hw][lanes_cat] != 0
     p = pool.s_prompt[:, :hw][lanes_cat]
     d = pool.s_decoded[:, :hw][lanes_cat]
@@ -237,6 +261,23 @@ def featurize_vec_many(clusters, profiles, predict_decodes,
                                       * HW_G2_SCALE, 1.0)
         block[:, hb + 2] = np.minimum(pool.cap[lanes_cat]
                                       * HW_CAP_SCALE, 1.0)
+    if include_cache:
+        # PrefixCache queries are plain dict lookups on the SAME object
+        # the stepping code mutates, so this scalar loop produces the
+        # exact floats the scalar path does
+        cb = (INSTANCE_DIMS + (1 if include_impact else 0)
+              + (HW_DIMS if include_hardware else 0))
+        pos_c = 0
+        for c, head in zip(clusters, heads):
+            hashes = (getattr(head, "prefix_hashes", None)
+                      if head is not None else None)
+            if hashes:
+                for j, lane in enumerate(c.lane_ids):
+                    pc = pool.lane_cache[int(lane)]
+                    if pc is not None:
+                        block[pos_c + j, cb] = pc.hit_fraction(
+                            head.prompt_tokens, hashes)
+            pos_c += c.m
     block *= alive[:, None]
     out = []
     pos = 0
@@ -267,13 +308,15 @@ def featurize_vec_many(clusters, profiles, predict_decodes,
 
 def pad_state(s: np.ndarray, m: int, m_max: int,
               include_impact: bool = True,
-              include_hardware: bool = False) -> np.ndarray:
+              include_hardware: bool = False,
+              include_cache: bool = False) -> np.ndarray:
     """Pad an m-instance state vector to m_max instance slots (zeros --
     the same encoding as a failed instance) so episodes with different
     cluster shapes share one replay buffer / Q network."""
     if m == m_max:
         return s
-    dims = instance_dims(include_impact, include_hardware)
+    dims = instance_dims(include_impact, include_hardware,
+                         include_cache)
     out = np.zeros(dims * m_max + ROUTER_DIMS, np.float32)
     out[:dims * m] = s[:dims * m]
     out[dims * m_max:] = s[dims * m:]

@@ -48,6 +48,7 @@ from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
+from repro.core.prefix_cache import PrefixCache
 from repro.core.profiles import HardwareProfile
 from repro.serving.request import Phase, Request
 
@@ -156,6 +157,13 @@ class VecSimPool:
         self.s_capat = np.zeros((0, s), np.int64)   # d_hat cap tokens
         self.spikes: List[List[float]] = []
         self.lane_profile: List[HardwareProfile] = []
+        # per-lane prefix/KV cache objects (core.prefix_cache) -- the
+        # SAME class the Python stepper uses, so hit/miss decisions are
+        # bit-identical by construction.  ``_any_cache`` is a python
+        # gate: cache-free pools (every existing workload) never touch
+        # the admission-time scalar loop.
+        self.lane_cache: List[Optional[PrefixCache]] = []
+        self._any_cache = False
         # -- request arena ----------------------------------------------
         self._G = 0
         self._cap_g = arena_cap
@@ -176,6 +184,7 @@ class VecSimPool:
         self.inv_d = np.zeros(g)
         self.inv_t = np.zeros(g)
         self.capat = np.zeros(g, np.int64)
+        self.cachedp = np.zeros(g, np.int64)   # cached-prefix-length lane
         self.objs: List[Request] = []
 
     # -- growth ----------------------------------------------------------
@@ -192,7 +201,7 @@ class VecSimPool:
     _ARENA = ("prompt", "dtotal", "prefilled", "decoded", "admit_seq",
               "phase", "lane", "preempts", "routed_at", "prefill_done",
               "first_tok", "finished", "nemit", "inv_d", "inv_t",
-              "capat")
+              "capat", "cachedp")
 
     @staticmethod
     def _fill_value(name):
@@ -217,6 +226,7 @@ class VecSimPool:
             [self.q_gid, np.full((n, self._Q), -1, np.int64)])
         self.spikes.extend([] for _ in range(n))
         self.lane_profile.extend([None] * n)
+        self.lane_cache.extend([None] * n)
         self._L += n
         self._all = np.arange(self._L, dtype=np.int64)
         self._target = np.full(self._L, -np.inf)
@@ -256,7 +266,9 @@ class VecSimPool:
                           profiles: Sequence[HardwareProfile],
                           scheduler: str = "fcfs", dt: float = 0.02,
                           chunked_prefill: int = 0,
-                          n_slots: Optional[int] = None) -> np.ndarray:
+                          n_slots: Optional[int] = None,
+                          prefix_cache_tokens: int = 0,
+                          prefix_block: int = 32) -> np.ndarray:
         """(Re)assign lanes for an episode and reset its clocks and
         backlog accumulators.  Reuses freed lanes; grows the pool as
         needed."""
@@ -289,7 +301,8 @@ class VecSimPool:
         self.bk_t[ep] = 0.0
         for k, (lane, prof) in enumerate(zip(lanes, profiles)):
             self._config_lane(int(lane), ep, k, prof, scheduler,
-                              chunked_prefill, n_slots)
+                              chunked_prefill, n_slots,
+                              prefix_cache_tokens, prefix_block)
         return lanes
 
     def _release_lane(self, lane: int):
@@ -311,10 +324,13 @@ class VecSimPool:
         self.rts[lane] = 0.0
         self.qps[lane] = 0.0
         self.outst[lane] = 0.0
+        self.lane_cache[lane] = None
 
     def _config_lane(self, lane: int, ep: int, local: int,
                      prof: HardwareProfile, scheduler: str,
-                     chunked_prefill: int, n_slots: Optional[int]):
+                     chunked_prefill: int, n_slots: Optional[int],
+                     prefix_cache_tokens: int = 0,
+                     prefix_block: int = 32):
         self.lane_ep[lane] = ep
         self.lane_local[lane] = local
         self.failed[lane] = False
@@ -337,10 +353,17 @@ class VecSimPool:
         self._release_lane(lane)
         self.spikes[lane] = []
         self.lane_profile[lane] = prof
+        self.lane_cache[lane] = (PrefixCache(prefix_cache_tokens,
+                                             prefix_block)
+                                 if prefix_cache_tokens > 0 else None)
+        if prefix_cache_tokens > 0:
+            self._any_cache = True
 
     def extend_episode(self, ep: int, prof: HardwareProfile,
                        scheduler: str, chunked_prefill: int,
-                       n_slots: Optional[int]) -> int:
+                       n_slots: Optional[int],
+                       prefix_cache_tokens: int = 0,
+                       prefix_block: int = 32) -> int:
         """Elastic scale-out: one more lane for an episode; its clock
         starts at the episode's current time (Cluster.add_instance
         parity)."""
@@ -348,7 +371,8 @@ class VecSimPool:
                 else self._add_lanes(1)[0])
         local = len(self.ep_lanes[ep])
         self._config_lane(lane, ep, local, prof, scheduler,
-                          chunked_prefill, n_slots)
+                          chunked_prefill, n_slots,
+                          prefix_cache_tokens, prefix_block)
         self.clock[lane] = self.ep_t[ep]
         self.ep_lanes[ep] = np.append(self.ep_lanes[ep], lane)
         self._lanes_ver += 1
@@ -373,6 +397,7 @@ class VecSimPool:
         self.decoded[g] = req.decoded
         self.phase[g] = _ENUM_TO_PH.get(req.phase, PH_QUEUED)
         self.preempts[g] = req.preemptions
+        self.cachedp[g] = req.cached_prefix
         self.objs.append(req)
         return g
 
@@ -630,13 +655,41 @@ class VecSimPool:
                     self.admit_seq[gids] = seq
                     self.admit_ctr[al2] = seq + 1
                     self.phase[gids] = PH_PREFILL
+                    if self._any_cache:
+                        # prefix-cache lookups are per-lane scalar ops
+                        # (at most one admission per lane per round);
+                        # the arena ``prefilled`` must carry the credit
+                        # BEFORE _res_insert copies it into the slot
+                        for k in range(al2.size):
+                            pc = self.lane_cache[int(al2[k])]
+                            if pc is None:
+                                continue
+                            gid = int(gids[k])
+                            r = self.objs[gid]
+                            if r is None or not r.prefix_hashes:
+                                continue
+                            cached = pc.admit(int(self.prompt[gid]),
+                                              r.prefix_hashes)
+                            if cached:
+                                self.prefilled[gid] = cached
+                                self.cachedp[gid] = cached
                     self._res_insert(al2, gids, seq)
                     hw = self._hw
-                    # NOTE SimInstance adds the admitted request's
+                    # SimInstance adds the admitted request's
                     # prefilled+decoded to rts here; by the queue
                     # invariant (queued progress is always zero --
                     # preemption resets before requeue) that term is
-                    # exactly 0, so no add is needed for bit parity.
+                    # exactly 0 UNLESS a prefix-cache hit credited the
+                    # prompt.  The in-place add below lands on the
+                    # ``rts`` alias the it_time expression reads, and
+                    # the cached part of the prompt leaves the
+                    # outstanding-work sum (it is never prefilled) --
+                    # both mirror the scalar stepper; with no cache the
+                    # adds are exactly 0 and x + 0.0 == x keeps bits.
+                    if self._any_cache:
+                        add = self.prefilled[gids] + self.decoded[gids]
+                        self.rts[al2] += add
+                        self.outst[al2] -= add
         act2 = active[:, None]
         # -- prefill progress (full, or one chunk per iteration) --------
         prefill_tokens = 0
@@ -811,6 +864,21 @@ class VecSimPool:
                 if uncap.any():
                     np.subtract.at(self.lane_ivv, lf,
                                    self.inv_d[fg] * ivt_f * uncap)
+        if self._any_cache:
+            # completion-time full-chain insert (prompt + reply KV
+            # stays cached).  SimInstance inserts in residents
+            # (admission) order; np.nonzero yields column order, so
+            # same-round finishers are replayed by admit_seq -- a
+            # global stable sort preserves each lane's relative order.
+            order = (np.argsort(self.admit_seq[fg], kind="stable")
+                     if lf.size > 1 else range(lf.size))
+            for k in order:
+                pc = self.lane_cache[int(lf[k])]
+                if pc is None:
+                    continue
+                r = self.objs[int(fg[k])]
+                if r is not None and r.full_hashes:
+                    pc.insert(r.full_hashes)
         for lane, gid in zip(lf, fg):
             self._sync_done(int(gid))
             done[int(self.lane_ep[lane])].append(int(gid))
@@ -974,6 +1042,7 @@ class VecSimPool:
                 self._span[3][idx[0]] -= debit
         self.prefilled[gid] = 0
         self.decoded[gid] = 0
+        self.cachedp[gid] = 0
         self.phase[gid] = PH_PREEMPTED
         self.preempts[gid] += 1
 
@@ -993,6 +1062,9 @@ class VecSimPool:
         self.qps[lane] = 0.0
         self.outst[lane] = 0.0
         self.pref_cnt[lane] = 0
+        if self.lane_cache[lane] is not None:
+            # the KV pool dies with the node (SimInstance.fail parity)
+            self.lane_cache[lane].clear()
         for gid in orphans:
             self._reset_progress(gid)
             self.phase[gid] = PH_QUEUED
@@ -1000,6 +1072,7 @@ class VecSimPool:
             r = self.objs[gid]
             r.prefilled = 0
             r.decoded = 0
+            r.cached_prefix = 0
             r.preemptions = int(self.preempts[gid])
             r.phase = Phase.QUEUED
             r.instance = None
@@ -1011,6 +1084,7 @@ class VecSimPool:
         r.phase = Phase.DONE
         r.prefilled = int(self.prefilled[gid])
         r.decoded = int(self.decoded[gid])
+        r.cached_prefix = int(self.cachedp[gid])
         r.preemptions = int(self.preempts[gid])
         r.admitted_idx = int(self.admit_seq[gid])
         lane = int(self.lane[gid])
@@ -1047,6 +1121,9 @@ class VecSimPool:
                 c = int(cols[0])
                 r.prefilled = int(self.s_prefilled[lane, c])
                 r.decoded = int(self.s_decoded[lane, c])
+                # cachedp never changes while resident, so the arena
+                # lane is current even though slot state is live
+                r.cached_prefix = int(self.cachedp[gid])
                 r.phase = (Phase.PREFILL
                            if self.s_state[lane, c] == SS_PREFILL
                            else Phase.DECODE)
@@ -1063,6 +1140,7 @@ class VecSimPool:
         r.phase = _PH_TO_ENUM[self.phase[gid]]
         r.prefilled = int(self.prefilled[gid])
         r.decoded = int(self.decoded[gid])
+        r.cached_prefix = int(self.cachedp[gid])
         r.preemptions = int(self.preempts[gid])
         r.instance = int(self.lane_local[lane]) if lane >= 0 else None
         if lane >= 0:
@@ -1112,6 +1190,13 @@ class VecInstanceView:
     @property
     def spikes(self) -> List[float]:
         return self.pool.spikes[self.lane]
+
+    @property
+    def prefix_cache(self):
+        """The lane's PrefixCache (None when the cache model is off);
+        the SAME object the stepping code mutates, so policy/featurizer
+        hit-fraction queries are bit-identical to the py backend."""
+        return self.pool.lane_cache[self.lane]
 
     # -- router-visible state -------------------------------------------
     def resident_token_sum(self) -> float:
@@ -1188,7 +1273,8 @@ class VecCluster:
                  scheduler: str = "fcfs", dt: float = 0.02,
                  chunked_prefill: int = 0,
                  n_slots: Optional[int] = None,
-                 pool: Optional[VecSimPool] = None, ep: int = 0):
+                 pool: Optional[VecSimPool] = None, ep: int = 0,
+                 prefix_cache_tokens: int = 0, prefix_block: int = 32):
         if isinstance(profile, HardwareProfile):
             profiles = [profile] * n_instances
         else:
@@ -1200,8 +1286,12 @@ class VecCluster:
         self.pool = pool or VecSimPool(1)
         self.ep = ep
         self.dt = dt
+        self._prefix_cache_tokens = prefix_cache_tokens
+        self._prefix_block = prefix_block
         self.lane_ids = self.pool.configure_episode(
-            ep, profiles, scheduler, dt, chunked_prefill, n_slots)
+            ep, profiles, scheduler, dt, chunked_prefill, n_slots,
+            prefix_cache_tokens=prefix_cache_tokens,
+            prefix_block=prefix_block)
         self.profile = profiles[0]
         self.profiles = tuple(profiles)
         self.instances = [VecInstanceView(self.pool, int(lane), i)
@@ -1270,7 +1360,9 @@ class VecCluster:
                      profile: Optional[HardwareProfile] = None) -> int:
         lane = self.pool.extend_episode(
             self.ep, profile or self.profile, scheduler,
-            chunked_prefill, None)
+            chunked_prefill, None,
+            prefix_cache_tokens=self._prefix_cache_tokens,
+            prefix_block=self._prefix_block)
         idx = len(self.instances)
         self.instances.append(VecInstanceView(self.pool, lane, idx))
         self.lane_ids = self.pool.ep_lanes[self.ep]

@@ -295,6 +295,67 @@ DEFAULT_TENANTS = {
 }
 
 
+@dataclass(frozen=True)
+class SessionConfig:
+    """Conversation-session shape for ``make_tenant_scenario``.
+
+    All lengths are in prefix-cache blocks of ``block`` tokens so a
+    turn's prompt is exactly the hash chain it claims to cover: turn k
+    re-sends the whole context so far (system prompt + prior turns +
+    new user input) and its reply extends the chain the NEXT turn's
+    prompt starts from.  Sessions of one tenant share the tenant's
+    system-prompt blocks, so even first turns can hit a warm cache."""
+    block: int = 32                        # tokens per hash block
+    turns: Tuple[int, int] = (2, 5)        # turns per session (incl.)
+    think_time: float = 2.0                # mean gap after a reply (s)
+    sys_blocks: int = 2                    # shared system prompt
+    user_blocks: Tuple[int, int] = (1, 3)  # new user input per turn
+    reply_blocks: Tuple[int, int] = (1, 3)  # assistant reply per turn
+    max_blocks: int = 24                   # session context cap
+
+
+def _session_requests(rng, sc: SessionConfig, names, assign, starts,
+                      pools, budget_blocks: int,
+                      ref: HardwareProfile, seed: int):
+    """Grow every session turn by turn -> (requests, samples), arrival
+    order not yet established (follow-ups interleave across sessions)."""
+    B = sc.block
+    reqs: List[Request] = []
+    samples: List[Sample] = []
+    for sid, (k, t0) in enumerate(zip(assign, starts)):
+        tname = names[int(k)]
+        n_turns = int(rng.integers(sc.turns[0], sc.turns[1] + 1))
+        # tenant-shared system prefix, then session-private blocks
+        chain: list = [("sys", tname, j) for j in range(sc.sys_blocks)]
+        p_blocks = sc.sys_blocks + int(
+            rng.integers(sc.user_blocks[0], sc.user_blocks[1] + 1))
+        t = float(t0)
+        for _turn in range(n_turns):
+            d_blocks = int(rng.integers(sc.reply_blocks[0],
+                                        sc.reply_blocks[1] + 1))
+            if p_blocks + d_blocks > budget_blocks:
+                break               # context would outgrow the KV pool
+            while len(chain) < p_blocks + d_blocks:
+                chain.append((seed, sid, len(chain)))
+            s = pools[tname].pop()
+            s.prompt_tokens = p_blocks * B
+            s.decode_tokens = d_blocks * B
+            reqs.append(Request(
+                prompt_tokens=p_blocks * B, decode_tokens=d_blocks * B,
+                arrival=t, task=s.task, tenant=tname,
+                prefix_hashes=tuple(chain[:p_blocks]),
+                full_hashes=tuple(chain[:p_blocks + d_blocks])))
+            samples.append(s)
+            # the follow-up arrives after the reply streams back plus a
+            # think-time gap (open loop: an estimate, not the realized
+            # completion time, so arrivals stay policy-independent)
+            t += ref.request_time(p_blocks * B, d_blocks * B) \
+                + float(rng.exponential(sc.think_time))
+            p_blocks = p_blocks + d_blocks + int(
+                rng.integers(sc.user_blocks[0], sc.user_blocks[1] + 1))
+    return reqs, samples
+
+
 def make_tenant_scenario(seed: int,
                          tenants: Optional[dict] = None,
                          n_requests: int = 400,
@@ -302,6 +363,7 @@ def make_tenant_scenario(seed: int,
                          pattern: str = "bursty",
                          profiles: Sequence[HardwareProfile] = (
                              V100_LLAMA2_7B,) * 4,
+                         sessions: Optional[SessionConfig] = None,
                          **arrival_kw) -> Scenario:
     """Multi-tenant open-loop arrival stream for the serving gateway.
 
@@ -310,8 +372,53 @@ def make_tenant_scenario(seed: int,
     per-tenant SLO breakdowns interesting); arrivals follow one shared
     poisson/bursty/diurnal process.  Requests carry ``tenant`` labels
     and the scenario keeps ``samples`` so the learned length predictor
-    (not the oracle) can sit in the routing loop."""
+    (not the oracle) can sit in the routing loop.
+
+    With ``sessions`` set, the stream is made of multi-turn
+    conversations instead of independent queries: each follow-up's
+    prompt extends the prior turn's full context (prompt + reply), every
+    request carries the per-block ``prefix_hashes`` / ``full_hashes``
+    chains the prefix-cache model consumes, and sessions of one tenant
+    share that tenant's system-prompt blocks.  The arrival process
+    drives session STARTS (at rate / mean-turns so the realized request
+    rate stays ~``rate``); follow-ups land after an estimated reply
+    stream plus an exponential think-time gap."""
     tenants = dict(tenants or DEFAULT_TENANTS)
+    if sessions is not None:
+        profiles = tuple(profiles)
+        rng = np.random.default_rng(seed)
+        names = sorted(tenants)
+        w = np.array([tenants[t][0] for t in names], float)
+        w /= w.sum()
+        mean_turns = (sessions.turns[0] + sessions.turns[1]) / 2.0
+        n_sessions = max(int(np.ceil(n_requests / mean_turns)), 1)
+        starts = arrival_times(n_sessions, rate / mean_turns, pattern,
+                               seed=seed + 3, **arrival_kw)
+        assign = rng.choice(len(names), size=n_sessions, p=w)
+        # one content sample per potential turn, per tenant task mix
+        pools = {}
+        for k, t in enumerate(names):
+            count = (int(np.sum(assign == k)) * sessions.turns[1]
+                     + 1)
+            pools[t] = list(reversed(generate(
+                count, seed=seed + 101 * (k + 1), tasks=tenants[t][1])))
+        budget_blocks = min(
+            int(min(p.capacity_tokens for p in profiles) * 0.95)
+            // sessions.block, sessions.max_blocks)
+        reqs, samples = _session_requests(
+            rng, sessions, names, assign, starts, pools, budget_blocks,
+            profiles[0], seed)
+        order = np.argsort([r.arrival for r in reqs], kind="stable")
+        reqs = [reqs[int(i)] for i in order[:n_requests]]
+        samples = [samples[int(i)] for i in order[:n_requests]]
+        return Scenario(requests=reqs, profiles=profiles,
+                        name=f"sessions{seed}-{pattern}",
+                        pattern=pattern, rate=rate, seed=seed,
+                        meta={"tenants": {t: tenants[t][0]
+                                          for t in names},
+                              "sessions": n_sessions,
+                              "block": sessions.block},
+                        samples=samples)
     profiles = tuple(profiles)
     rng = np.random.default_rng(seed)
     names = sorted(tenants)

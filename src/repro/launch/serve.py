@@ -71,7 +71,13 @@ def _router_cfg(args) -> rl.RouterConfig:
                            explore_episodes=max(args.train_episodes - 3,
                                                 1),
                            scheduler=args.scheduler,
-                           chunked_prefill=args.chunked_prefill)
+                           chunked_prefill=args.chunked_prefill,
+                           prefix_cache_tokens=args.prefix_cache,
+                           prefix_block=args.prefix_block,
+                           cache_weight=(0.5 if args.prefix_cache
+                                         else 0.0),
+                           include_cache_features=bool(
+                               args.prefix_cache))
 
 
 def _train_quick_agent(args, cfg: rl.RouterConfig, profile=None):
@@ -138,7 +144,9 @@ def _tiny_engines(args, capacity: int = 400):
     params = params_lib.init_params(jax.random.PRNGKey(0), cfg)
     return [LLMInstance(cfg, params, prof,
                         get_scheduler(args.scheduler), n_slots=4,
-                        cache_len=128, instance_id=i)
+                        cache_len=128, instance_id=i,
+                        prefix_cache_tokens=args.prefix_cache,
+                        prefix_block=args.prefix_block)
             for i in range(args.instances)]
 
 
@@ -149,7 +157,9 @@ def serve_gateway(args):
                          scheduler=args.scheduler,
                          chunked_prefill=args.chunked_prefill,
                          backend=args.sim_backend,
-                         default_deadline_s=args.deadline)
+                         default_deadline_s=args.deadline,
+                         prefix_cache_tokens=args.prefix_cache,
+                         prefix_block=args.prefix_block)
     if args.backend == "engine":
         # tiny real engines: short random prompts, oracle-free routing
         # via the mixing heuristic (no content for the predictor)
@@ -178,10 +188,13 @@ def serve_gateway(args):
     else:
         base = _base_profile(args)
         profiles = (base,) * args.instances
+        sessions = (wl.SessionConfig(block=args.prefix_block)
+                    if args.sessions else None)
         scn = wl.make_tenant_scenario(seed=7, n_requests=args.requests,
                                       rate=args.rate,
                                       pattern=args.pattern,
-                                      profiles=profiles)
+                                      profiles=profiles,
+                                      sessions=sessions)
         length = MicroBatchPredictor(quick_bucket_predictor(
             base, n_train=2000, epochs=2))
         if args.policy == "rl":
@@ -230,7 +243,8 @@ def main():
     ap.add_argument("--backend", choices=("sim", "engine"),
                     default="sim", help="gateway cluster backend")
     ap.add_argument("--policy", default="mixing",
-                    choices=("rl", "mixing", "jsq", "rr"),
+                    choices=("rl", "mixing", "mixing+cache", "jsq",
+                             "rr", "sticky"),
                     help="gateway routing policy")
     ap.add_argument("--pattern", default="bursty",
                     choices=("poisson", "bursty", "diurnal"))
@@ -244,6 +258,17 @@ def main():
                     "past it are cancelled)")
     ap.add_argument("--on-full", default="shed",
                     choices=("shed", "defer"))
+    ap.add_argument("--prefix-cache", type=int, default=0,
+                    help="per-instance prefix/KV cache budget in "
+                    "tokens (0 = cache model off); enables the "
+                    "cache-affinity policies and RL state feature")
+    ap.add_argument("--prefix-block", type=int, default=32,
+                    help="prefix-cache hash-block size in tokens")
+    ap.add_argument("--sessions", action="store_true",
+                    help="gateway: multi-turn conversation workload "
+                    "(follow-up prompts extend prior turns; tenants "
+                    "share system prompts) instead of independent "
+                    "queries")
     ap.add_argument("--checkpoint", default=None,
                     help="router checkpoint dir for --policy rl")
     ap.add_argument("--calibrate", action="store_true",

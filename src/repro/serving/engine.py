@@ -25,6 +25,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.common.config import ModelConfig
+from repro.core.prefix_cache import PrefixCache
 from repro.core.profiles import HardwareProfile
 from repro.models import model as model_lib
 from repro.serving.request import Phase, Request
@@ -59,7 +60,8 @@ def _build_fns(cfg: ModelConfig, cache_len: int):
 class LLMInstance:
     def __init__(self, cfg: ModelConfig, params, profile: HardwareProfile,
                  scheduler: InstanceScheduler, n_slots: int = 8,
-                 cache_len: int = 256, instance_id: int = 0):
+                 cache_len: int = 256, instance_id: int = 0,
+                 prefix_cache_tokens: int = 0, prefix_block: int = 32):
         assert cfg.input_mode == "tokens", "engine path uses token inputs"
         self.cfg, self.params, self.profile = cfg, params, profile
         self.scheduler = scheduler
@@ -74,6 +76,14 @@ class LLMInstance:
         self.clock = 0.0
         self.completed: List[Request] = []
         self.failed = False
+        # prefix/KV cache model (core.prefix_cache): the real prefill
+        # still runs in full (model correctness -- the reduced configs
+        # here don't share KV across slots), but the VIRTUAL clock
+        # charges only the uncached suffix, which is the quantity the
+        # simulator's fidelity harness validates.
+        self.prefix_cache = (PrefixCache(prefix_cache_tokens,
+                                         prefix_block)
+                             if prefix_cache_tokens > 0 else None)
 
     # -- router-visible state ----------------------------------------------
     @property
@@ -125,7 +135,15 @@ class LLMInstance:
                 req = self.queue[pick]
                 del self.queue[pick]
                 self._admit(req, free_slot)
-                prefill_tokens += req.prompt_tokens
+                cached = 0
+                if self.prefix_cache is not None and req.prefix_hashes:
+                    cached = self.prefix_cache.admit(req.prompt_tokens,
+                                                     req.prefix_hashes)
+                    req.cached_prefix = cached
+                # cached prefix costs no prefill compute on the virtual
+                # clock; it re-enters iteration_time as resident
+                # context below (same split as SimInstance)
+                prefill_tokens += req.prompt_tokens - cached
         completions = self._decode_iteration()
         resident_other = max(self.resident_tokens() - prefill_tokens, 0)
         self.clock += self.profile.iteration_time(prefill_tokens,
@@ -169,6 +187,8 @@ class LLMInstance:
             if r.decoded >= r.decode_tokens:
                 r.phase = Phase.DONE
                 r.finished = self.clock
+                if self.prefix_cache is not None and r.full_hashes:
+                    self.prefix_cache.insert(r.full_hashes)
                 self.completed.append(r)
                 self.slots[i] = None
                 done.append(r)
@@ -193,6 +213,8 @@ class LLMInstance:
         orphans = [r for r in self.slots if r is not None] + list(self.queue)
         self.slots = [None] * self.n_slots
         self.queue.clear()
+        if self.prefix_cache is not None:
+            self.prefix_cache.clear()
         for r in orphans:
             r.reset_progress()
             r.phase = Phase.QUEUED

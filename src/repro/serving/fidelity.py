@@ -61,6 +61,16 @@ class FidelityConfig:
     max_time: float = 600.0
     quantiles: Tuple[float, ...] = (0.5, 0.95, 0.99)
     backends: Tuple[str, ...] = ("py", "vec", "engine")
+    # multi-turn session stream + prefix-cache model: follow-up prompts
+    # extend the prior turn's context in whole ``prefix_block`` blocks
+    # (prompt lengths stay on a bounded ladder of block multiples, so
+    # the engine still pays a bounded number of prefill retraces) and
+    # every backend runs a per-instance PrefixCache of
+    # ``prefix_cache_tokens``.  Validates that the sim's hit/miss
+    # prefill cost tracks the engine's suffix-only virtual clock.
+    sessions: bool = False
+    prefix_cache_tokens: int = 0
+    prefix_block: int = 16
 
 
 def serving_profile(profile: HardwareProfile,
@@ -74,28 +84,67 @@ def serving_profile(profile: HardwareProfile,
         max_batch=fcfg.n_slots)
 
 
-def make_stream(fcfg: FidelityConfig) -> List[Tuple[int, int, float]]:
+def make_stream(fcfg: FidelityConfig) -> List[tuple]:
     """The deterministic arrival stream as (prompt, decode, arrival)
-    specs -- each backend materializes its own fresh Request objects."""
+    specs -- each backend materializes its own fresh Request objects.
+    With ``fcfg.sessions``, specs are 5-tuples that append the
+    per-block (prefix_hashes, full_hashes) chains of a growing
+    multi-turn conversation."""
     rng = np.random.default_rng(fcfg.seed)
-    gaps = rng.exponential(1.0 / fcfg.rate, size=fcfg.n_requests)
-    arrivals = np.cumsum(gaps)
-    lengths = rng.choice(fcfg.prompt_lengths, size=fcfg.n_requests)
-    lo, hi = fcfg.decode_range
-    decodes = rng.integers(lo, hi + 1, size=fcfg.n_requests)
-    return [(int(p), int(d), float(t))
-            for p, d, t in zip(lengths, decodes, arrivals)]
+    if not fcfg.sessions:
+        gaps = rng.exponential(1.0 / fcfg.rate, size=fcfg.n_requests)
+        arrivals = np.cumsum(gaps)
+        lengths = rng.choice(fcfg.prompt_lengths, size=fcfg.n_requests)
+        lo, hi = fcfg.decode_range
+        decodes = rng.integers(lo, hi + 1, size=fcfg.n_requests)
+        return [(int(p), int(d), float(t))
+                for p, d, t in zip(lengths, decodes, arrivals)]
+    B = fcfg.prefix_block
+    # context ladder bounded so the engine compiles few prefill shapes
+    # and every turn fits the engine-sized KV budget
+    max_blocks = min(int(fcfg.capacity_tokens * 0.9) // B, 10)
+    n_sessions = max(fcfg.n_requests // 3, 1)
+    starts = np.cumsum(rng.exponential(3.0 / fcfg.rate,
+                                       size=n_sessions))
+    out: List[tuple] = []
+    sid = 0
+    while len(out) < fcfg.n_requests:
+        t = float(starts[sid % n_sessions]) + (sid // n_sessions) * 30.0
+        chain: List[tuple] = []
+        p_blocks = int(rng.integers(1, 3))
+        for _turn in range(int(rng.integers(2, 5))):
+            d_blocks = int(rng.integers(1, 3))
+            if p_blocks + d_blocks > max_blocks:
+                break
+            while len(chain) < p_blocks + d_blocks:
+                chain.append((fcfg.seed, sid, len(chain)))
+            out.append((p_blocks * B, d_blocks * B, t,
+                        tuple(chain[:p_blocks]),
+                        tuple(chain[:p_blocks + d_blocks])))
+            t += 1.0 + float(rng.exponential(1.0))
+            p_blocks = p_blocks + d_blocks + 1
+        sid += 1
+    out.sort(key=lambda x: x[2])
+    return out[:fcfg.n_requests]
 
 
-def _requests(stream: Sequence[Tuple[int, int, float]]) -> List[Request]:
-    return [Request(prompt_tokens=p, decode_tokens=d, arrival=t,
-                    tenant="fidelity") for p, d, t in stream]
+def _requests(stream: Sequence[tuple]) -> List[Request]:
+    out = []
+    for spec in stream:
+        p, d, t = spec[:3]
+        hashes = spec[3:] if len(spec) > 3 else (None, None)
+        out.append(Request(prompt_tokens=p, decode_tokens=d, arrival=t,
+                           tenant="fidelity", prefix_hashes=hashes[0],
+                           full_hashes=hashes[1]))
+    return out
 
 
 def _gateway_cfg(fcfg: FidelityConfig, backend: str) -> GatewayConfig:
     return GatewayConfig(dt=fcfg.dt, n_slots=fcfg.n_slots,
                          max_time=fcfg.max_time,
-                         backend=backend if backend != "engine" else "py")
+                         backend=backend if backend != "engine" else "py",
+                         prefix_cache_tokens=fcfg.prefix_cache_tokens,
+                         prefix_block=fcfg.prefix_block)
 
 
 def _percentiles(vals: List[float], quantiles: Sequence[float]) -> Dict:
@@ -124,7 +173,9 @@ def _backend_cluster(backend: str, profile: HardwareProfile,
         params = params_lib.init_params(jax.random.PRNGKey(0), model_cfg)
     engines = [LLMInstance(model_cfg, params, profile,
                            get_scheduler("fcfs"), n_slots=fcfg.n_slots,
-                           cache_len=fcfg.cache_len, instance_id=i)
+                           cache_len=fcfg.cache_len, instance_id=i,
+                           prefix_cache_tokens=fcfg.prefix_cache_tokens,
+                           prefix_block=fcfg.prefix_block)
                for i in range(fcfg.n_instances)]
     return EngineClusterAdapter(engines, dt=fcfg.dt)
 
@@ -148,6 +199,11 @@ def run_backend(backend: str, profile: HardwareProfile,
     report["makespan"] = (max(r.finished for r in done)
                           - min(r.arrival for r in done)) if done else None
     report["shed"] = stats["shed"]
+    caches = [getattr(inst, "prefix_cache", None)
+              for inst in gw.cluster.instances]
+    hit = sum(c.hit_tokens for c in caches if c is not None)
+    look = sum(c.lookup_tokens for c in caches if c is not None)
+    report["cache_hit_rate"] = (hit / look) if look else None
     return report
 
 

@@ -183,6 +183,10 @@ class _EngineInstanceView:
             todo += r.prompt_tokens + r.decode_tokens
         return todo
 
+    @property
+    def prefix_cache(self):
+        return getattr(self.engine, "prefix_cache", None)
+
 
 class EngineClusterAdapter:
     """Drive real JAX ``LLMInstance`` replicas behind the gateway with
@@ -255,6 +259,9 @@ class GatewayConfig:
     # simulator backend for the built-in cluster: "py" (SimInstance
     # reference stepper) or "vec" (core.vecsim structure-of-arrays)
     backend: str = "py"
+    # per-instance prefix/KV cache model (core.prefix_cache); 0 = off
+    prefix_cache_tokens: int = 0
+    prefix_block: int = 32
     # client timeouts: a DEFERRED request whose deadline has passed is
     # dropped from the overflow queue and counted as ``cancelled``.
     # Requests may carry their own absolute ``deadline``; otherwise
@@ -287,10 +294,11 @@ class Gateway:
             self.cluster = cluster
         else:
             profiles = tuple(profiles)
-            self.cluster = Cluster(profiles, len(profiles),
-                                   cfg.scheduler, cfg.dt,
-                                   cfg.chunked_prefill, cfg.n_slots,
-                                   backend=cfg.backend)
+            self.cluster = Cluster(
+                profiles, len(profiles), cfg.scheduler, cfg.dt,
+                cfg.chunked_prefill, cfg.n_slots, backend=cfg.backend,
+                prefix_cache_tokens=cfg.prefix_cache_tokens,
+                prefix_block=cfg.prefix_block)
         self.policy = policy
         self.length = length or OracleLength()
         self.metrics = StreamMetrics(window=cfg.metrics_window,

@@ -22,6 +22,7 @@ import numpy as np
 
 from repro.core import policies as legacy, rl_router as rl
 from repro.core import state as state_lib
+from repro.core.prefix_cache import hit_fractions
 
 
 @runtime_checkable
@@ -77,21 +78,49 @@ class LeastOutstandingWork:
         return pick
 
 
+class PrefixAffinityPolicy:
+    """Sticky-session baseline (llama-balancer's prompt-cache routing):
+    send the request to the alive instance holding its longest cached
+    prefix; break ties -- including the all-miss cold path -- by least
+    outstanding tokens.  Purely greedy on cache affinity, no workload
+    mixing: the baseline the cache-weighted heuristics must beat."""
+    name = "sticky"
+
+    def route(self, cluster, req, d_hat: int) -> Optional[int]:
+        alive = cluster.alive()
+        if not alive:
+            return None
+        fracs = hit_fractions(cluster, req)
+        best = max(fracs[i] for i in alive)
+        tied = [i for i in alive if fracs[i] == best]
+        if len(tied) == 1:
+            return tied[0]
+        loads = [cluster.instances[i].outstanding_tokens() for i in tied]
+        return tied[int(np.argmin(loads))]
+
+
 class MixingImpactPolicy:
     """The paper's workload-impact heuristic (Eq. 1-2) with the
     capacity-fit defer correction -- exactly the prior that guides the
-    RL router, served standalone."""
+    RL router, served standalone.  ``cache_weight > 0`` adds the
+    per-instance prefix-cache hit fraction to the scores ("mixing+cache"
+    in the factory), trading load balance against prefill reuse."""
     name = "mixing"
 
     def __init__(self, alpha: float = 0.5,
-                 defer_prior_bias: float = -0.05):
+                 defer_prior_bias: float = -0.05,
+                 cache_weight: float = 0.0):
         self.alpha = alpha
         self.defer_prior_bias = defer_prior_bias
+        self.cache_weight = cache_weight
+        if cache_weight:
+            self.name = "mixing+cache"
 
     def route(self, cluster, req, d_hat: int) -> Optional[int]:
         if not cluster.alive():
             return None
-        scores = rl.mixing_scores(cluster, req, d_hat, self.alpha)
+        scores = rl.mixing_scores(cluster, req, d_hat, self.alpha,
+                                  cache_weight=self.cache_weight)
         bonus = rl.guidance_from_scores(cluster, req, d_hat, scores,
                                         self.defer_prior_bias)
         a = int(np.argmax(bonus))
@@ -114,7 +143,8 @@ class RLPolicy:
         cfg = self.cfg
         mask = state_lib.action_mask(cluster)
         w_sel = cfg.guidance_floor if cfg.variant == "guided" else 0.0
-        scores = rl.mixing_scores(cluster, req, d_hat, cfg.alpha)
+        scores = rl.mixing_scores(cluster, req, d_hat, cfg.alpha,
+                                  cache_weight=cfg.cache_weight)
         bonus = rl.guidance_from_scores(cluster, req, d_hat, scores,
                                         cfg.defer_prior_bias)
         if (self.agent.cfg.q_arch == "decomposed"
@@ -123,7 +153,8 @@ class RLPolicy:
                 cluster, cluster.profile, n_buckets=cfg.n_buckets,
                 include_impact=cfg.include_impact_features,
                 predict_decode=lambda r: d_hat, alpha=cfg.alpha,
-                include_hardware=cfg.include_hardware_features)
+                include_hardware=cfg.include_hardware_features,
+                include_cache=cfg.include_cache_features)
             prior = w_sel * bonus if w_sel else None
             return int(self.agent.act(
                 s, mask, epsilon=0.0, prior=prior,
@@ -165,14 +196,21 @@ def make_gateway_policy(name: str, router_cfg: Optional[rl.RouterConfig]
                         = None, agent=None, profile=None,
                         checkpoint_dir: Optional[str] = None,
                         m: Optional[int] = None):
-    """Policy factory: ``rr`` | ``jsq`` | ``mixing`` | ``rl`` (needs an
-    ``agent`` or ``checkpoint_dir``), or any ``core.policies`` name
-    (oracle-length legacy baselines, adapter-wrapped)."""
+    """Policy factory: ``rr`` | ``jsq`` | ``mixing`` | ``mixing+cache``
+    | ``sticky`` | ``rl`` (needs an ``agent`` or ``checkpoint_dir``),
+    or any ``core.policies`` name (oracle-length legacy baselines,
+    adapter-wrapped)."""
     cfg = router_cfg or rl.RouterConfig()
     if name in ("rr", "round_robin"):
         return RoundRobinPolicy()
     if name == "jsq":
         return LeastOutstandingWork()
+    if name == "sticky":
+        return PrefixAffinityPolicy()
+    if name == "mixing+cache":
+        return MixingImpactPolicy(
+            alpha=cfg.alpha, defer_prior_bias=cfg.defer_prior_bias,
+            cache_weight=cfg.cache_weight or 0.5)
     if name == "mixing":
         return MixingImpactPolicy(alpha=cfg.alpha,
                                   defer_prior_bias=cfg.defer_prior_bias)

@@ -34,6 +34,12 @@ class Request:
     tenant: str = "default"                  # gateway multi-tenant label
     tokens: Optional[list] = None            # real token ids (engine path)
     deadline: Optional[float] = None         # client gives up after this t
+    # prefix-cache identity (core.prefix_cache): per-block hash chain of
+    # the prompt, and of the full prompt+response context (inserted at
+    # completion so the NEXT turn of the conversation can hit it).
+    # ``None`` opts the request out of the cache model entirely.
+    prefix_hashes: Optional[tuple] = None
+    full_hashes: Optional[tuple] = None
 
     # lifecycle (filled by engine/simulator)
     phase: Phase = Phase.QUEUED
@@ -47,6 +53,7 @@ class Request:
     admitted_idx: int = -1                   # admission order (eviction)
     token_times: List[float] = field(default_factory=list)
     preemptions: int = 0
+    cached_prefix: int = 0                   # prefill tokens served from cache
 
     # -- metrics -----------------------------------------------------------
     @property
@@ -73,6 +80,7 @@ class Request:
         """Preemption: work is lost; request restarts its prefill."""
         self.decoded = 0
         self.prefilled = 0
+        self.cached_prefix = 0
         self.phase = Phase.PREEMPTED
         self.preemptions += 1
 

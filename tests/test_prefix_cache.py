@@ -1,0 +1,287 @@
+"""Prefix/KV cache model: radix-LRU semantics, cache-aware routing
+policies, the RL cache feature, session workloads, and py-vs-vec
+bit-exact parity on cached-prefill scenarios."""
+import numpy as np
+import pytest
+
+from repro.core import rl_router as rl
+from repro.core import state as state_lib
+from repro.core.policies import make_policy
+from repro.core.prefix_cache import PrefixCache, hit_fractions
+from repro.core.profiles import V100_LLAMA2_7B
+from repro.core.simulator import Cluster, run_heuristic
+from repro.core.workload import SessionConfig, make_tenant_scenario
+from repro.serving.gateway import Gateway, GatewayConfig
+from repro.serving.policies import make_gateway_policy
+from repro.serving.request import Request
+
+PROF = V100_LLAMA2_7B
+
+
+# -- the cache model ---------------------------------------------------------
+
+def _chain(*idx):
+    return tuple(("t", i) for i in idx)
+
+
+def test_match_is_longest_prefix_and_read_only():
+    pc = PrefixCache(capacity_tokens=1024, block=16)
+    pc.insert(_chain(0, 1, 2))
+    assert pc.match(_chain(0, 1, 2, 3)) == 3
+    assert pc.match(_chain(0, 1)) == 2
+    assert pc.match(_chain(9)) == 0
+    assert pc.match(None) == 0
+    before = list(pc._blocks)
+    pc.match(_chain(0))               # queries must not touch LRU order
+    pc.cached_tokens(100, _chain(0, 1))
+    pc.hit_fraction(100, _chain(0, 1))
+    assert list(pc._blocks) == before
+
+
+def test_cached_tokens_capped_below_prompt():
+    pc = PrefixCache(capacity_tokens=1024, block=16)
+    pc.insert(_chain(0, 1, 2, 3))
+    # a fully-cached prompt still prefills >= 1 token (first logits)
+    assert pc.cached_tokens(64, _chain(0, 1, 2, 3)) == 63
+    assert pc.cached_tokens(100, _chain(0, 1, 2, 3)) == 64
+    assert pc.cached_tokens(0, _chain(0, 1)) == 0
+
+
+def test_lru_eviction_removes_leaves_before_prefixes():
+    pc = PrefixCache(capacity_tokens=4 * 16, block=16)
+    pc.insert(_chain(0, 1, 2, 3))       # exactly at budget
+    pc.insert(_chain(0, 9))             # one block over -> one eviction
+    # the deepest old leaf dies first; shared parent (block 0) survives
+    assert pc.match(_chain(0, 9)) == 2
+    assert pc.match(_chain(0, 1, 2, 3)) == 3   # block 3 was evicted
+    assert len(pc) == 4
+
+
+def test_admit_updates_stats_and_clear_keeps_them():
+    pc = PrefixCache(capacity_tokens=1024, block=16)
+    assert pc.admit(48, _chain(0, 1, 2)) == 0       # cold
+    assert pc.admit(48, _chain(0, 1, 2)) == 47      # warm, capped
+    assert (pc.hit_tokens, pc.lookup_tokens) == (47, 96)
+    pc.clear()
+    assert len(pc) == 0
+    assert (pc.hit_tokens, pc.lookup_tokens) == (47, 96)
+    assert pc.admit(48, None) == 0                  # opt-out requests
+
+
+def test_block_validation():
+    with pytest.raises(ValueError):
+        PrefixCache(100, block=0)
+
+
+# -- session workloads -------------------------------------------------------
+
+def _session_scn(seed=7, n=160, rate=24.0, m=3, block=16):
+    return make_tenant_scenario(seed=seed, n_requests=n, rate=rate,
+                                pattern="poisson",
+                                profiles=(PROF,) * m,
+                                sessions=SessionConfig(block=block))
+
+
+def test_session_scenario_shape():
+    scn = _session_scn()
+    rs = scn.requests
+    assert len(scn.samples) == len(rs)
+    assert all(a.arrival <= b.arrival for a, b in zip(rs, rs[1:]))
+    for r, s in zip(rs, scn.samples):
+        assert r.prompt_tokens == 16 * len(r.prefix_hashes)
+        assert r.prompt_tokens + r.decode_tokens \
+            == 16 * len(r.full_hashes)
+        assert r.full_hashes[:len(r.prefix_hashes)] == r.prefix_hashes
+        assert s.prompt_tokens == r.prompt_tokens
+        assert s.decode_tokens == r.decode_tokens
+    # follow-up turns extend prior context; tenants share system blocks
+    assert any(len(r.prefix_hashes) > 3 for r in rs)
+    chat = [r for r in rs if r.tenant == "chat"]
+    assert len({r.prefix_hashes[0] for r in chat}) == 1
+
+
+def test_session_follow_ups_hit_the_serving_cache():
+    scn = _session_scn()
+    gw = Gateway(GatewayConfig(prefix_cache_tokens=4096,
+                               prefix_block=16),
+                 (PROF,) * 3, make_gateway_policy("sticky"))
+    gw.run(scn)
+    hit = sum(i.prefix_cache.hit_tokens for i in gw.cluster.instances)
+    look = sum(i.prefix_cache.lookup_tokens
+               for i in gw.cluster.instances)
+    assert hit / look > 0.4
+    # hit_tokens also counts re-admissions after preemption, so it
+    # dominates the per-request last-admission credit
+    assert 0 < sum(r.cached_prefix for r in scn.requests) <= hit
+
+
+# -- routing policies --------------------------------------------------------
+
+def test_sticky_routes_follow_up_to_warm_instance():
+    cluster = Cluster(PROF, 3, prefix_cache_tokens=4096,
+                      prefix_block=16)
+    cluster.instances[1].prefix_cache.insert(_chain(0, 1, 2))
+    req = Request(prompt_tokens=64, decode_tokens=16,
+                  prefix_hashes=_chain(0, 1, 2, 3))
+    assert make_gateway_policy("sticky").route(cluster, req, 16) == 1
+    fr = hit_fractions(cluster, req)
+    assert fr[1] == 48 / 64 and fr[0] == fr[2] == 0.0
+
+
+def test_sticky_cold_falls_back_to_least_outstanding():
+    cluster = Cluster(PROF, 2, prefix_cache_tokens=4096)
+    cluster.enqueue(Request(prompt_tokens=100, decode_tokens=50))
+    cluster.route(0)
+    req = Request(prompt_tokens=32, decode_tokens=8,
+                  prefix_hashes=_chain(5))
+    assert make_gateway_policy("sticky").route(cluster, req, 8) == 1
+
+
+def test_mixing_cache_weight_breaks_toward_warm_instance():
+    cluster = Cluster(PROF, 2, prefix_cache_tokens=4096,
+                      prefix_block=16)
+    cluster.instances[1].prefix_cache.insert(_chain(0, 1, 2, 3))
+    req = Request(prompt_tokens=64, decode_tokens=16,
+                  prefix_hashes=_chain(0, 1, 2, 3))
+    blind = rl.mixing_scores(cluster, req, 16, 0.5)
+    aware = rl.mixing_scores(cluster, req, 16, 0.5, cache_weight=0.5)
+    assert blind[0] == blind[1]
+    assert aware[1] > aware[0]
+    assert aware[1] - blind[1] == pytest.approx(0.5 * 63 / 64)
+    assert make_gateway_policy("mixing+cache").route(cluster, req,
+                                                     16) == 1
+
+
+# -- RL state feature --------------------------------------------------------
+
+def test_cache_feature_dims_and_values():
+    assert state_lib.instance_dims(True, False, True) \
+        == state_lib.instance_dims(True, False) + state_lib.CACHE_DIMS
+    cluster = Cluster(PROF, 2, prefix_cache_tokens=4096,
+                      prefix_block=16)
+    cluster.instances[0].prefix_cache.insert(_chain(0, 1))
+    cluster.enqueue(Request(prompt_tokens=64, decode_tokens=16,
+                            prefix_hashes=_chain(0, 1, 2, 3)))
+    s = state_lib.featurize(cluster, PROF, include_cache=True)
+    dims = state_lib.instance_dims(True, False, True)
+    assert s.shape[0] == state_lib.state_dim(2, True, False, True)
+    cb = state_lib.INSTANCE_DIMS + 1
+    assert s[cb] == np.float32(32 / 64)
+    assert s[dims + cb] == 0.0
+
+
+def test_cache_feature_bit_exact_py_vs_vec():
+    cfg = rl.RouterConfig(variant="guided", n_instances=3,
+                          q_arch="decomposed", seed=0,
+                          include_cache_features=True,
+                          prefix_cache_tokens=2048, prefix_block=16,
+                          cache_weight=0.5)
+    scn_p, scn_v = _session_scn(seed=11, n=90), _session_scn(seed=11,
+                                                             n=90)
+    env_p = rl.RoutingEnv(cfg, PROF)
+    env_v = rl.RoutingEnv(cfg, PROF, sim_backend="vec")
+    s_p = env_p.reset(scn_p.requests)
+    s_v = env_v.reset(scn_v.requests)
+    done, steps = False, 0
+    while not done and steps < 600:
+        np.testing.assert_array_equal(s_p, s_v)
+        np.testing.assert_array_equal(env_p.guidance_bonus(),
+                                      env_v.guidance_bonus())
+        a = (int(np.argmax(env_p.guidance_bonus()[:3]))
+             if env_p.cluster.central else 3)
+        s_p, r_p, done, _ = env_p.step(a)
+        s_v, r_v, done_v, _ = env_v.step(a)
+        assert done == done_v
+        assert r_v == pytest.approx(r_p, rel=1e-9, abs=1e-9)
+        steps += 1
+    assert done
+    for a, b in zip(scn_p.requests, scn_v.requests):
+        assert a.finished == b.finished
+        assert a.cached_prefix == b.cached_prefix
+
+
+# -- cached-prefill stepper parity ------------------------------------------
+
+def _run_pair(seed, m, pc_tokens, scheduler="fcfs", chunk=0):
+    scn_a, scn_b = (_session_scn(seed=seed, n=140, m=m),
+                    _session_scn(seed=seed, n=140, m=m))
+    out = []
+    for scn, backend in ((scn_a, "py"), (scn_b, "vec")):
+        cluster = Cluster(PROF, m, scheduler=scheduler,
+                          chunked_prefill=chunk, backend=backend,
+                          prefix_cache_tokens=pc_tokens,
+                          prefix_block=16)
+        run_heuristic(cluster, scn.requests,
+                      make_policy("round_robin", PROF))
+        out.append((scn.requests, cluster))
+    return out
+
+
+@pytest.mark.parametrize("pc_tokens", [0, 512, 8192])
+def test_session_parity_py_vs_vec(pc_tokens):
+    """Cached-prefill admission credit, completion-time inserts, and
+    LRU evictions (512-token budget) must be bit-identical."""
+    (ra, ca), (rb, cb) = _run_pair(seed=5, m=3, pc_tokens=pc_tokens)
+    for a, b in zip(ra, rb):
+        assert a.finished == b.finished
+        assert a.first_token == b.first_token
+        assert a.prefill_done == b.prefill_done
+        assert a.cached_prefix == b.cached_prefix
+        assert a.prefilled == b.prefilled
+        assert a.preemptions == b.preemptions
+    if pc_tokens:
+        for ia, ib in zip(ca.instances, cb.instances):
+            assert ia.prefix_cache.hit_tokens \
+                == ib.prefix_cache.hit_tokens
+            assert list(ia.prefix_cache._blocks) \
+                == list(ib.prefix_cache._blocks)
+        assert sum(r.cached_prefix for r in ra) > 0
+
+
+def test_failed_instance_loses_its_cache_on_both_backends():
+    scn_a, scn_b = _session_scn(seed=3, n=120), _session_scn(seed=3,
+                                                             n=120)
+    reqs = []
+    for scn, backend in ((scn_a, "py"), (scn_b, "vec")):
+        cluster = Cluster(PROF, 3, backend=backend,
+                          prefix_cache_tokens=4096, prefix_block=16)
+        pending = sorted(scn.requests, key=lambda r: r.arrival)
+        i, rr, failed = 0, 0, False
+        while len(cluster.completed) < len(pending) \
+                and cluster.t < 3000:
+            while (i < len(pending)
+                   and pending[i].arrival <= cluster.t):
+                cluster.enqueue(pending[i])
+                i += 1
+            if cluster.t > 1.5 and not failed:
+                cluster.fail_instance(0)
+                failed = True
+                assert len(cluster.instances[0].prefix_cache) == 0
+            alive = cluster.alive()
+            while cluster.central and alive:
+                cluster.route(alive[rr % len(alive)])
+                rr += 1
+                alive = cluster.alive()
+            cluster.advance()
+        assert len(cluster.completed) == len(pending)
+        reqs.append(pending)
+    for a, b in zip(*reqs):
+        assert a.finished == b.finished
+        assert a.cached_prefix == b.cached_prefix
+        assert a.preemptions == b.preemptions
+
+
+# -- the headline win --------------------------------------------------------
+
+def test_cache_aware_policy_beats_cache_blind_on_sessions():
+    """mixing+cache must beat plain mixing on P95 E2E on a
+    session-heavy stream (the bench_prefix_cache gate, in miniature)."""
+    out = {}
+    for pol in ("mixing", "mixing+cache"):
+        scn = _session_scn(seed=7, n=200, rate=30.0)
+        gw = Gateway(GatewayConfig(prefix_cache_tokens=4096,
+                                   prefix_block=16),
+                     (PROF,) * 3, make_gateway_policy(pol))
+        stats = gw.run(scn)
+        out[pol] = stats["snapshot"]["e2e"]["p95"]
+    assert out["mixing+cache"] < out["mixing"]

@@ -11,8 +11,9 @@ from repro.core.policies import make_policy
 from repro.core.profiles import A100_LLAMA31_8B, V100_LLAMA2_7B
 from repro.core.simulator import Cluster, SimInstance, run_heuristic
 from repro.core.vecsim import VecCluster, VecSimPool
-from repro.core.workload import (Scenario, generate, make_tenant_scenario,
-                                 scenario_stream, to_requests)
+from repro.core.workload import (Scenario, SessionConfig, generate,
+                                 make_tenant_scenario, scenario_stream,
+                                 to_requests)
 from repro.serving.gateway import Gateway, GatewayConfig
 from repro.serving.policies import make_gateway_policy
 from repro.serving.request import Phase, Request
@@ -497,3 +498,58 @@ def test_gateway_rides_vec_backend_with_identical_results():
     p_a = out[0]["snapshot"]["e2e"]["p95"]
     p_b = out[1]["snapshot"]["e2e"]["p95"]
     assert p_a == pytest.approx(p_b, rel=1e-12)
+
+
+@given(seed=st.integers(0, 30), m=st.integers(1, 4),
+       pc_tokens=st.sampled_from([0, 256, 4096]),
+       inject_failure=st.booleans())
+@settings(max_examples=10, deadline=None)
+def test_session_cache_parity_property(seed, m, pc_tokens,
+                                       inject_failure):
+    """Randomized multi-turn session streams through the prefix-cache
+    model: cached-prefill admission credit, completion-time radix
+    inserts, LRU evictions (the 256-token budget forces them), and
+    failure-time cache wipes must be bit-identical across steppers."""
+    def drive(backend):
+        scn = make_tenant_scenario(seed=seed, n_requests=100,
+                                   rate=24.0, pattern="poisson",
+                                   profiles=(PROF,) * max(m, 1),
+                                   sessions=SessionConfig(block=16))
+        rs = scn.requests
+        cluster = Cluster(PROF, m, backend=backend,
+                          prefix_cache_tokens=pc_tokens,
+                          prefix_block=16)
+        pending = sorted(rs, key=lambda r: r.arrival)
+        i, rr, failed = 0, 0, False
+        while len(cluster.completed) < len(rs) and cluster.t < 3000:
+            while i < len(pending) and pending[i].arrival <= cluster.t:
+                cluster.enqueue(pending[i])
+                i += 1
+            if inject_failure and m > 1 and not failed \
+                    and cluster.t > 1.0:
+                cluster.fail_instance(0)
+                failed = True
+            if failed and cluster.t > 1.5:
+                cluster.instances[0].restore()
+                cluster.instances[0].clock = cluster.t
+                failed = False
+            alive = cluster.alive()
+            while cluster.central and alive:
+                cluster.route(alive[rr % len(alive)])
+                rr += 1
+                alive = cluster.alive()
+            cluster.advance()
+        assert len(cluster.completed) == len(rs)
+        return rs, cluster
+    (ra, ca), (rb, cb) = drive("py"), drive("vec")
+    _assert_request_parity(ra, rb)
+    for a, b in zip(ra, rb):
+        assert a.cached_prefix == b.cached_prefix
+    for ia, ib in zip(ca.instances, cb.instances):
+        pa = getattr(ia, "prefix_cache", None)
+        pb = getattr(ib, "prefix_cache", None)
+        assert (pa is None) == (pb is None)
+        if pa is not None:
+            assert pa.hit_tokens == pb.hit_tokens
+            assert pa.lookup_tokens == pb.lookup_tokens
+            assert list(pa._blocks) == list(pb._blocks)
