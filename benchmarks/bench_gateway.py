@@ -8,9 +8,16 @@ wrapper, LRU cache) in the routing hot path; no oracle decode lengths
 anywhere.  The RL agent itself is trained with the predictor's d-hat in
 the loop (``train_router(length_predictor=...)``).
 
-Emits per-policy windowed P95/P50 E2E, TTFT P95, SLO attainment, and
-predictor-service counters.  Acceptance (asserted): the workload-aware
-policies (mixing, rl) beat round-robin on P95 E2E.
+Emits per-policy windowed P95/P50 E2E, TTFT P95, SLO attainment,
+predictor-service counters, and decision-attribution metrics (regret
+vs the r_mixing yardstick, agree-rate, predictor drift).  A final
+traced re-run of the mixing policy measures tracing overhead:
+simulated P95 E2E must be bit-identical-or-better within 5%
+(asserted -- tracing must not perturb decisions) and the run honors
+``REPRO_TRACE`` / ``REPRO_METRICS_OUT`` by writing the Chrome
+trace-event JSON and the metrics registry (CI's trace-smoke
+artifacts).  Acceptance (asserted): the workload-aware policies
+(mixing, rl) beat round-robin on P95 E2E.
 """
 from __future__ import annotations
 
@@ -29,8 +36,11 @@ from repro.core.predictor import quick_bucket_predictor
 from repro.core.profiles import V100_LLAMA2_7B
 from repro.serving.gateway import (Gateway, GatewayConfig,
                                    MicroBatchPredictor)
+from repro.serving import obs
 from repro.serving.metrics import SLO
+from repro.serving.obs import MetricsRegistry
 from repro.serving.policies import RLPolicy, make_gateway_policy
+from repro.serving.trace import TraceRecorder
 from repro.training.train_loop import train_router
 
 PROF = V100_LLAMA2_7B
@@ -80,24 +90,36 @@ def main():
 
     slo = SLO(ttft_s=10.0, tbt_s=0.5, e2e_s=60.0)
     p95 = {}
+    walls = {}
+    registry = MetricsRegistry()
     for name in POLICIES:
         policy = (RLPolicy(out["agent"], cfg) if name == "rl"
                   else make_gateway_policy(name, cfg))
         length = MicroBatchPredictor(predictor)
-        gw = Gateway(GatewayConfig(slo=slo), (PROF,) * M, policy,
-                     length=length)
+        gw = Gateway(GatewayConfig(slo=slo, attribution=True),
+                     (PROF,) * M, policy, length=length)
         t0 = time.time()
         stats = gw.run(_stream())
         wall = time.time() - t0
+        walls[name] = wall
         snap = stats["snapshot"]
         e2e, ttft = snap["e2e"], snap["ttft"]
         p95[name] = e2e["p95"]
+        at = snap["attribution"]
+        registry.ingest_snapshot(snap, prefix=f"gateway_{name}")
         emit(f"gateway_{name}", wall / max(stats["n"], 1) * 1e6,
              f"p95_e2e={e2e['p95']:.2f} p50_e2e={e2e['p50']:.2f} "
              f"p95_ttft={ttft['p95']:.2f} slo={snap['slo_rate']:.3f} "
              f"n={stats['n']} preempt={stats['preemptions']} "
              f"pred_forwards={length.forwards} "
              f"pred_hit={length.hits}")
+        emit(f"gateway_{name}_attrib", 0.0,
+             f"agree={at['agree_rate']:.3f} "
+             f"regret_p95={at['regret']['p95']:.4f} "
+             f"drift_p50={at['drift']['abs_err']['p50']:.1f} "
+             f"bucket_acc={at['drift']['bucket_accuracy']:.3f} "
+             f"joined={at['drift']['joined']}")
+    registry.ingest_rl(out["agent"].telemetry())
 
     # backpressure probe: bounded queue on a deliberately saturating
     # stream, shed mode
@@ -109,6 +131,41 @@ def main():
          f"queue_cap=16 probe_rate={PROBE_RATE:g} shed={stats['shed']} "
          f"admitted={stats['admitted']} "
          f"shed_rate={stats['snapshot']['shed_rate']:.3f}")
+
+    # tracing-overhead probe: the SAME mixing run, fully traced
+    # (sample=1.0, explain() on every decision, counter sampling).
+    # Tracing must be an observer: simulated latency may only move by
+    # the 5% band the CI trend gate also enforces, and on the virtual
+    # clock the traced run should be bit-identical (events don't
+    # advance time).  Wall-clock ratio is informational (runner noise).
+    recorder = TraceRecorder()
+    gw = Gateway(GatewayConfig(slo=slo, attribution=True), (PROF,) * M,
+                 make_gateway_policy("mixing", cfg),
+                 length=MicroBatchPredictor(predictor), trace=recorder)
+    t0 = time.time()
+    stats = gw.run(_stream())
+    wall_traced = time.time() - t0
+    traced_p95 = stats["snapshot"]["e2e"]["p95"]
+    overhead = traced_p95 / p95["mixing"]
+    wall_ratio = wall_traced / max(walls["mixing"], 1e-9)
+    emit("gateway_trace_overhead", 0.0,
+         f"overhead_p95={overhead:.4f} wall_ratio={wall_ratio:.2f} "
+         f"events={len(recorder)} dropped={recorder.dropped}")
+    assert overhead <= 1.05, (
+        f"tracing perturbed the simulated tail: P95 E2E "
+        f"{p95['mixing']:.3f} -> {traced_p95:.3f} ({overhead:.3f}x)")
+
+    trace_path = os.environ.get("REPRO_TRACE")
+    if trace_path:
+        doc = obs.write_trace(recorder, trace_path,
+                              title="bench_gateway mixing")
+        emit("gateway_trace_export", 0.0,
+             f"events={len(doc['traceEvents'])} path_set=1")
+    metrics_path = os.environ.get("REPRO_METRICS_OUT")
+    if metrics_path:
+        registry.ingest_snapshot(stats["snapshot"],
+                                 prefix="gateway_mixing_traced")
+        registry.save(metrics_path)
 
     # acceptance: workload-aware routing beats round robin on P95 E2E
     # with the learned predictor (not the oracle) in the loop

@@ -11,7 +11,14 @@ cannot poison the rest, (b) per-bench env (e.g. bench_batched_rl's
 XLA_FLAGS) applies cleanly, and (c) wall time is attributed honestly.
 Any failing module makes the harness exit non-zero.  ``--json PATH``
 additionally writes {results: [{bench, ok, seconds, rows: [...]}],
-failures: [...]} for perf-trajectory tracking across commits.
+failures: [{bench, reason, stderr_tail}]} for perf-trajectory tracking
+across commits.
+
+``--trace PATH`` / ``--metrics-out PATH`` are forwarded to the child
+benches as ``REPRO_TRACE`` / ``REPRO_METRICS_OUT``; benches that serve
+through the gateway (bench_gateway) honor them by writing a Chrome
+trace-event JSON and a metrics-registry JSON (see ``repro.serving.obs``
+-- this is CI's trace-smoke artifact).
 """
 from __future__ import annotations
 
@@ -49,18 +56,25 @@ def _parse_rows(stdout: str):
     return rows
 
 
+def _pop_opt(args, flag):
+    if flag not in args:
+        return None
+    i = args.index(flag)
+    try:
+        val = args[i + 1]
+    except IndexError:
+        print("usage: run.py [--json PATH] [--trace PATH] "
+              "[--metrics-out PATH] [bench ...]", file=sys.stderr)
+        sys.exit(2)
+    del args[i:i + 2]
+    return val
+
+
 def main() -> None:
     args = sys.argv[1:]
-    json_path = None
-    if "--json" in args:
-        i = args.index("--json")
-        try:
-            json_path = args[i + 1]
-        except IndexError:
-            print("usage: run.py [--json PATH] [bench ...]",
-                  file=sys.stderr)
-            sys.exit(2)
-        del args[i:i + 2]
+    json_path = _pop_opt(args, "--json")
+    trace_path = _pop_opt(args, "--trace")
+    metrics_path = _pop_opt(args, "--metrics-out")
     only = set(args)
     unknown = only - {k for k, _ in MODULES}
     if unknown:
@@ -75,6 +89,10 @@ def main() -> None:
     src = os.path.join(repo, "src")
     env["PYTHONPATH"] = src + (
         os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    if trace_path:
+        env["REPRO_TRACE"] = os.path.abspath(trace_path)
+    if metrics_path:
+        env["REPRO_METRICS_OUT"] = os.path.abspath(metrics_path)
     for key, mod_name in MODULES:
         if only and key not in only:
             continue
@@ -89,7 +107,10 @@ def main() -> None:
             print(f"# {key} ok in {dt:.1f}s", flush=True)
         else:
             sys.stderr.write(proc.stderr)
-            failures.append((key, f"exit {proc.returncode}"))
+            tail = "\n".join(proc.stderr.splitlines()[-15:])
+            failures.append({"bench": key,
+                             "reason": f"exit {proc.returncode}",
+                             "stderr_tail": tail})
             print(f"# {key} FAILED in {dt:.1f}s", flush=True)
         results.append({"bench": key, "ok": ok,
                         "seconds": round(dt, 2),
@@ -99,7 +120,8 @@ def main() -> None:
             json.dump({"results": results, "failures": failures}, f,
                       indent=2)
     if failures:
-        print("# FAILURES:", failures)
+        print("# FAILURES:", [(f["bench"], f["reason"])
+                              for f in failures])
         sys.exit(1)
 
 

@@ -32,7 +32,7 @@ from typing import Dict, List, Optional, Tuple
 # metric-name prefixes -> direction ("low" = lower is better)
 LOWER_IS_BETTER = ("p50", "p95", "p99", "e2e", "ttft", "tbt", "us",
                    "seconds", "preempt", "shed", "loss", "wait",
-                   "makespan", "spikes")
+                   "makespan", "spikes", "overhead")
 HIGHER_IS_BETTER = ("acc", "bucket_acc", "slo", "speedup", "eps",
                     "throughput", "attain", "r2", "within", "fairness")
 

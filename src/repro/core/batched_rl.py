@@ -227,7 +227,8 @@ def train_batched(cfg: rl.RouterConfig,
                   agent=None,
                   predict_decode: Optional[Callable] = None,
                   valid_fn: Optional[Callable[[], Scenario]] = None,
-                  verbose: bool = False) -> Dict:
+                  verbose: bool = False,
+                  registry=None) -> Dict:
     """Train the RL router over ``n_episodes`` scenarios, ``bcfg.n_envs``
     at a time; returns {agent, history} like `rl_router.train`.
 
@@ -235,7 +236,14 @@ def train_batched(cfg: rl.RouterConfig,
     simulation consumes its request objects).  ``valid_fn`` (optional)
     returns a validation Scenario; every ``bcfg.valid_every`` completed
     episodes the current greedy policy is scored on it and the best
-    snapshot is restored at the end, as in the sequential trainer."""
+    snapshot is restored at the end, as in the sequential trainer.
+
+    ``registry`` (optional ``serving.obs.MetricsRegistry``) receives
+    training telemetry after every finished episode: the episode's
+    epsilon / reward / mean latencies under ``rl_episode_*`` and the
+    agent's learner internals (loss, |TD|, replay priorities) from
+    ``agent.telemetry()`` under ``rl_*`` -- the same scrape target the
+    gateway publishes serving metrics to."""
     import dataclasses
     import jax
     import jax.numpy as jnp
@@ -350,6 +358,14 @@ def train_batched(cfg: rl.RouterConfig,
                     best = (v["e2e_mean"],
                             jax.tree.map(jnp.copy, agent.params))
             history.append(stats)
+            if registry is not None:
+                registry.ingest(
+                    {"index": float(sl.ep), "epsilon": sl.eps,
+                     "reward": sl.reward, "guide_w": sl.w_k,
+                     "e2e_mean": stats.get("e2e_mean"),
+                     "ttft_mean": stats.get("ttft_mean")},
+                    prefix="rl_episode")
+                registry.ingest_rl(agent.telemetry())
             if verbose:
                 print(f"ep {sl.ep:3d} [{sl.scenario.name:>20s}] "
                       f"eps={sl.eps:.2f} reward={sl.reward:10.1f} "

@@ -261,6 +261,11 @@ class DQNAgent:
         self.r_mean = 0.0
         self._r_init = False
         self._pending_prio = None      # (idx, td device array) to apply
+        # last learn step's loss/|TD| as DEVICE arrays: stashing them
+        # costs nothing on the async learner path; telemetry() pays the
+        # sync only when somebody actually reads them
+        self.last_loss = None
+        self.last_td = None
 
     def act(self, state: np.ndarray, mask: np.ndarray,
             epsilon: float = 0.0,
@@ -346,6 +351,8 @@ class DQNAgent:
         batch = jnp.asarray(rows)
         self.params, self.opt, self.target, loss, td_abs = train_batch(
             self.cfg, self.params, self.opt, self.target, batch)
+        self.last_loss = loss
+        self.last_td = td_abs
         if idx is not None:
             self._pending_prio = (idx, td_abs,
                                   self.buffer.write_seq[idx].copy())
@@ -353,6 +360,27 @@ class DQNAgent:
                 self._resolve_priorities()
         self.steps += 1
         return float(loss) if sync else None
+
+    def telemetry(self) -> Dict[str, float]:
+        """Training telemetry snapshot for the metrics registry: last
+        TD loss / |TD| stats, replay occupancy, priority distribution.
+        Reading the stashed device arrays synchronizes with the (maybe
+        async) learner -- call between learn bursts, not inside them."""
+        out: Dict[str, float] = {
+            "learn_steps": float(self.steps),
+            "replay_size": float(self.buffer.size),
+            "reward_mean": float(self.r_mean),
+        }
+        if self.last_loss is not None:
+            out["loss"] = float(self.last_loss)
+            td = np.asarray(self.last_td)
+            out["td_abs_mean"] = float(td.mean())
+            out["td_abs_max"] = float(td.max())
+        if self.cfg.prioritized and self.buffer.size:
+            pr = self.buffer.prio[:self.buffer.size]
+            out["replay_prio_mean"] = float(pr.mean())
+            out["replay_prio_max"] = float(self.buffer.max_prio)
+        return out
 
     # checkpointable state (router fault tolerance)
     def state_dict(self):

@@ -217,6 +217,16 @@ class BucketPredictor:
             return int(edges[-1] * 2)
         return int(edges[bucket])
 
+    def bucket_of(self, decode_tokens: int) -> int:
+        """The bucket an ACTUAL decode length lands in -- label() over
+        a realized length instead of a Sample (predictor-drift
+        bucket-accuracy in StreamMetrics)."""
+        if self.equal_buckets:
+            return min(decode_tokens // 250, self.n_out - 1)
+        return min(self.profile.bucketize(decode_tokens,
+                                          self.cfg.n_buckets),
+                   self.n_out - 1)
+
     def decode_estimate(self, samples: Sequence[wl.Sample]) -> np.ndarray:
         """d-hat per sample = upper bound of the predicted bucket (what the
         router's impact estimator consumes)."""

@@ -19,6 +19,7 @@ from typing import Dict, List, Optional, Sequence
 
 from repro.core.prefix_cache import PrefixCache
 from repro.core.profiles import HardwareProfile
+from repro.serving import trace as _trace
 from repro.serving.request import Phase, Request
 from repro.serving.scheduler import InstanceScheduler, get_scheduler
 
@@ -27,8 +28,12 @@ class SimInstance:
     def __init__(self, profile: HardwareProfile,
                  scheduler: InstanceScheduler, instance_id: int = 0,
                  chunked_prefill: int = 0, n_slots: Optional[int] = None,
-                 prefix_cache_tokens: int = 0, prefix_block: int = 32):
+                 prefix_cache_tokens: int = 0, prefix_block: int = 32,
+                 trace=None):
         self.profile = profile
+        # lifecycle tracing (serving.trace); NULL keeps the hot path at
+        # one attribute check per emission site
+        self.trace = trace if trace is not None else _trace.NULL
         self.scheduler = scheduler
         self.instance_id = instance_id
         self.chunk = chunked_prefill
@@ -127,6 +132,7 @@ class SimInstance:
 
     def _iteration(self) -> List[Request]:
         profile = self.profile
+        tr = self.trace
         prefill_tokens = 0
         # resident context tokens before this iteration's prefill/decode
         rts = self._rts
@@ -154,6 +160,10 @@ class SimInstance:
                     self._out -= cached
                 self._rts += req.prefilled + req.decoded
                 rts = self._rts
+                if tr.enabled:
+                    tr.emit(self.clock, _trace.EV_INST_ADMIT, req.rid,
+                            self.instance_id, req.tenant,
+                            {"cached": int(req.cached_prefix)})
         # prefill progress (full, or one chunk per iteration)
         for r in self.residents:
             if r.phase is Phase.PREFILL:
@@ -161,9 +171,16 @@ class SimInstance:
                     else min(self.chunk, r.prompt_tokens - r.prefilled)
                 r.prefilled += step
                 prefill_tokens += step
+                if tr.enabled and self.chunk and step > 0:
+                    tr.emit(self.clock, _trace.EV_PREFILL_CHUNK, r.rid,
+                            self.instance_id, r.tenant,
+                            {"tokens": int(step)})
                 if r.prefilled >= r.prompt_tokens:
                     r.phase = Phase.DECODE
                     r.prefill_done = self.clock
+                    if tr.enabled:
+                        tr.emit(self.clock, _trace.EV_PREFILL_DONE, r.rid,
+                                self.instance_id, r.tenant)
                 if not self.chunk:
                     break     # unchunked: only one prefill per iteration
         # decode every resident already in decode phase
@@ -183,6 +200,9 @@ class SimInstance:
             rts += 1
             if r.first_token is None:
                 r.first_token = self.clock
+                if tr.enabled:
+                    tr.emit(self.clock, _trace.EV_FIRST_TOKEN, r.rid,
+                            self.instance_id, r.tenant)
             r.token_times.append(self.clock)
             if on_token is not None:
                 on_token(r)
@@ -191,6 +211,9 @@ class SimInstance:
                 r.finished = self.clock
                 self.completed.append(r)
                 done.append(r)
+                if tr.enabled:
+                    tr.emit(self.clock, _trace.EV_COMPLETE, r.rid,
+                            self.instance_id, r.tenant)
                 rts -= r.prefilled + r.decoded
                 if self.prefix_cache is not None and r.full_hashes:
                     # the finished conversation's KV (prompt + reply)
@@ -210,6 +233,10 @@ class SimInstance:
             self._out += victim.prefilled + victim.decoded
             if self.on_preempt is not None:
                 self.on_preempt(victim)
+            if tr.enabled:
+                tr.emit(self.clock, _trace.EV_PREEMPT, victim.rid,
+                        self.instance_id, victim.tenant,
+                        {"lost": int(victim.prefilled + victim.decoded)})
             victim.reset_progress()
             self.queue.appendleft(victim)
             self._qps += victim.prompt_tokens
@@ -219,6 +246,9 @@ class SimInstance:
     # -- fault injection ------------------------------------------------------
     def fail(self) -> List[Request]:
         self.failed = True
+        if self.trace.enabled:
+            self.trace.emit(self.clock, _trace.EV_FAIL, -1,
+                            self.instance_id)
         orphans = list(self.residents) + list(self.queue)
         self.residents, self.queue = [], deque()
         if self.prefix_cache is not None:
@@ -257,21 +287,23 @@ class Cluster:
                 scheduler: str = "fcfs", dt: float = 0.02,
                 chunked_prefill: int = 0,
                 n_slots: Optional[int] = None, backend: str = "py",
-                prefix_cache_tokens: int = 0, prefix_block: int = 32):
+                prefix_cache_tokens: int = 0, prefix_block: int = 32,
+                trace=None):
         if cls is Cluster and backend == "vec":
             from repro.core.vecsim import VecCluster
             # not a Cluster subclass, so __init__ below is not re-run
             return VecCluster(profile, n_instances, scheduler, dt,
                               chunked_prefill, n_slots,
                               prefix_cache_tokens=prefix_cache_tokens,
-                              prefix_block=prefix_block)
+                              prefix_block=prefix_block, trace=trace)
         return super().__new__(cls)
 
     def __init__(self, profile, n_instances: int,
                  scheduler: str = "fcfs", dt: float = 0.02,
                  chunked_prefill: int = 0,
                  n_slots: Optional[int] = None, backend: str = "py",
-                 prefix_cache_tokens: int = 0, prefix_block: int = 32):
+                 prefix_cache_tokens: int = 0, prefix_block: int = 32,
+                 trace=None):
         if isinstance(profile, HardwareProfile):
             profiles = [profile] * n_instances
         else:
@@ -284,11 +316,12 @@ class Cluster:
         self.dt = dt
         self._prefix_cache_tokens = prefix_cache_tokens
         self._prefix_block = prefix_block
+        self._trace = trace if trace is not None else _trace.NULL
         self.instances = [
             SimInstance(profiles[i], get_scheduler(scheduler), i,
                         chunked_prefill, n_slots,
                         prefix_cache_tokens=prefix_cache_tokens,
-                        prefix_block=prefix_block)
+                        prefix_block=prefix_block, trace=self._trace)
             for i in range(n_instances)]
         self.central: deque = deque()
         self.t = 0.0
@@ -298,6 +331,13 @@ class Cluster:
     @property
     def m(self) -> int:
         return len(self.instances)
+
+    def set_trace(self, trace):
+        """Attach a TraceRecorder after construction (gateway over a
+        pre-built cluster)."""
+        self._trace = trace
+        for inst in self.instances:
+            inst.trace = trace
 
     def alive(self) -> List[int]:
         return [i for i, inst in enumerate(self.instances)
@@ -329,7 +369,8 @@ class Cluster:
         inst = SimInstance(profile or self.profile, get_scheduler(scheduler),
                            len(self.instances), chunked_prefill,
                            prefix_cache_tokens=self._prefix_cache_tokens,
-                           prefix_block=self._prefix_block)
+                           prefix_block=self._prefix_block,
+                           trace=self._trace)
         inst.clock = self.t
         # inherit cluster-level observer hooks (the RL env's incremental
         # backlog accounting must see the new instance's decode events)

@@ -50,6 +50,7 @@ import numpy as np
 
 from repro.core.prefix_cache import PrefixCache
 from repro.core.profiles import HardwareProfile
+from repro.serving import trace as _trace
 from repro.serving.request import Phase, Request
 
 # phase codes (arena ``phase`` column) <-> serving.request.Phase
@@ -186,6 +187,13 @@ class VecSimPool:
         self.capat = np.zeros(g, np.int64)
         self.cachedp = np.zeros(g, np.int64)   # cached-prefix-length lane
         self.objs: List[Request] = []
+        # lifecycle tracing: the fused round loop appends PACKED
+        # per-round arrays (fancy-index copies of the round's lanes/
+        # gids/timestamps) to _trbuf; drain_trace() unpacks them into
+        # recorder events at advance/span boundaries so per-event
+        # Python work never runs inside the vectorized loop
+        self.trace = _trace.NULL
+        self._trbuf: List[tuple] = []
 
     # -- growth ----------------------------------------------------------
     _LANE_1D = ("lane_ep", "lane_local", "failed", "clock", "rts", "qps",
@@ -601,6 +609,8 @@ class VecSimPool:
                 if dry.any():
                     self.clock[dry] = target[dry]
                     active &= ~dry
+        if self._trbuf:
+            self.drain_trace()
 
     def _advance_rounds(self, lanes_all: np.ndarray,
                         done: Dict[int, List[int]]):
@@ -690,6 +700,12 @@ class VecSimPool:
                         add = self.prefilled[gids] + self.decoded[gids]
                         self.rts[al2] += add
                         self.outst[al2] -= add
+                    if self.trace.enabled:
+                        # clock0 may alias self.clock here, but the
+                        # fancy index copies the pre-advance values
+                        self._trbuf.append(
+                            ("adm", clock0[al2], al2, gids,
+                             self.cachedp[gids]))
         act2 = active[:, None]
         # -- prefill progress (full, or one chunk per iteration) --------
         prefill_tokens = 0
@@ -714,12 +730,26 @@ class VecSimPool:
                     step = ustep
                 else:
                     step = np.where(un[:, None], ustep, step)
+            if self.trace.enabled:
+                # chunk events only on chunked lanes (SimInstance
+                # emits them only when self.chunk is set)
+                chm = (step > 0) & (self.chunk[:, None] > 0)
+                if chm.any():
+                    trl, trc = np.nonzero(chm)
+                    self._trbuf.append(
+                        ("chunk", clock0[trl], trl,
+                         self.res_gid[trl, trc], step[trl, trc]))
             spf += step                                  # in place
             prefill_tokens = step.sum(1)
             fin_pref = pref & (spf >= spr)
             n_tr = int(np.count_nonzero(fin_pref))
             if n_tr:
                 had_transition = True
+                if self.trace.enabled:
+                    trl, trc = np.nonzero(fin_pref)
+                    self._trbuf.append(
+                        ("pfd", clock0[trl], trl,
+                         self.res_gid[trl, trc]))
                 st[fin_pref] = SS_DECODE
                 pfd = self.s_pfdone[:, :hw]
                 pfd[fin_pref] = np.broadcast_to(
@@ -762,6 +792,11 @@ class VecSimPool:
                 sfirst = self.s_first[:, :hw]
                 fresh = dec & np.isnan(sfirst)
                 if fresh.any():
+                    if self.trace.enabled:
+                        trl, trc = np.nonzero(fresh)
+                        self._trbuf.append(
+                            ("ft", clock1[trl], trl,
+                             self.res_gid[trl, trc]))
                     sfirst[fresh] = np.broadcast_to(
                         clock1[:, None], fresh.shape)[fresh]
             rts = rts + per_lane
@@ -823,6 +858,8 @@ class VecSimPool:
         ``fin`` is a full-width [L, hw] mask (row index == lane id)."""
         lf, fc = np.nonzero(fin)
         fg = self.res_gid[lf, fc]
+        if self.trace.enabled:
+            self._trbuf.append(("fin", clock1[lf], lf, fg))
         self.phase[fg] = PH_DONE
         self.finished[fg] = clock1[lf]
         self.prefilled[fg] = self.s_prefilled[lf, fc]
@@ -1022,6 +1059,11 @@ class VecSimPool:
             col = int(occ[np.argmax(self.s_admit[lane, occ])])
             gid = self._evict_slot(lane, col)
             progress = float(self.prefilled[gid] + self.decoded[gid])
+            if self.trace.enabled:
+                # SimInstance stamps preemptions at the post-advance
+                # clock (the eviction loop runs after the clock write)
+                self._trbuf.append(("pre", float(self.clock[lane]),
+                                    lane, gid, progress))
             self.rts[lane] -= progress
             self.outst[lane] += progress   # requeued at full size again
             self._reset_progress(gid, t0)
@@ -1050,6 +1092,8 @@ class VecSimPool:
     def fail_lane(self, lane: int) -> List[int]:
         """Node failure: orphaned gids in residents-then-queue order
         (SimInstance.fail parity); lane state cleared."""
+        if self.trace.enabled:
+            self._trbuf.append(("fail", float(self.clock[lane]), lane))
         orphans = [self._evict_slot(lane, int(c))
                    for c in self.resident_cols(lane)]
         orphans += [int(x) for x in self.queue_gids(lane)]
@@ -1076,7 +1120,62 @@ class VecSimPool:
             r.preemptions = int(self.preempts[gid])
             r.phase = Phase.QUEUED
             r.instance = None
+        if self._trbuf:
+            self.drain_trace()   # called between advances
         return orphans
+
+    # -- trace drain -----------------------------------------------------
+    def drain_trace(self):
+        """Unpack the round loop's packed event buffers into recorder
+        events.  Runs once per advance/advance_span call (and after a
+        fail_lane), so the per-event Python cost is paid outside the
+        fused rounds; head-sampling is applied here by the recorder's
+        own rid filter, identical to the Python stepper's inline
+        emission."""
+        buf = self._trbuf
+        self._trbuf = []
+        tr = self.trace
+        objs = self.objs
+        loc = self.lane_local
+        for rec in buf:
+            kind = rec[0]
+            if kind == "fail":
+                tr.emit(rec[1], _trace.EV_FAIL, -1, int(loc[rec[2]]))
+                continue
+            if kind == "pre":
+                _, t, lane, gid, lost = rec
+                r = objs[gid]
+                if r is not None:
+                    tr.emit(t, _trace.EV_PREEMPT, r.rid,
+                            int(loc[lane]), r.tenant,
+                            {"lost": int(lost)})
+                continue
+            if kind == "adm":
+                _, ts, lanes, gids, cached = rec
+                for t, ln, g, c in zip(ts, lanes, gids, cached):
+                    r = objs[int(g)]
+                    if r is not None:
+                        tr.emit(float(t), _trace.EV_INST_ADMIT, r.rid,
+                                int(loc[ln]), r.tenant,
+                                {"cached": int(c)})
+            elif kind == "chunk":
+                _, ts, lanes, gids, toks = rec
+                for t, ln, g, k in zip(ts, lanes, gids, toks):
+                    r = objs[int(g)]
+                    if r is not None:
+                        tr.emit(float(t), _trace.EV_PREFILL_CHUNK,
+                                r.rid, int(loc[ln]), r.tenant,
+                                {"tokens": int(k)})
+            else:
+                etype = (_trace.EV_PREFILL_DONE if kind == "pfd"
+                         else _trace.EV_FIRST_TOKEN if kind == "ft"
+                         else _trace.EV_COMPLETE)
+                _, ts, lanes, gids = rec
+                for t, ln, g in zip(ts, lanes, gids):
+                    r = objs[int(g)]
+                    if r is not None:
+                        tr.emit(float(t), etype, r.rid,
+                                int(loc[ln]), r.tenant)
 
     # -- object sync -----------------------------------------------------
     def _sync_done(self, gid: int):
@@ -1274,7 +1373,8 @@ class VecCluster:
                  chunked_prefill: int = 0,
                  n_slots: Optional[int] = None,
                  pool: Optional[VecSimPool] = None, ep: int = 0,
-                 prefix_cache_tokens: int = 0, prefix_block: int = 32):
+                 prefix_cache_tokens: int = 0, prefix_block: int = 32,
+                 trace=None):
         if isinstance(profile, HardwareProfile):
             profiles = [profile] * n_instances
         else:
@@ -1284,6 +1384,11 @@ class VecCluster:
                     f"{len(profiles)} profiles for {n_instances} "
                     "instances")
         self.pool = pool or VecSimPool(1)
+        if trace is not None:
+            # pool-level: a shared-pool trainer would trace ALL its
+            # episodes' lanes; the gateway/cluster path owns a private
+            # single-episode pool, so lane set == this cluster
+            self.pool.trace = trace
         self.ep = ep
         self.dt = dt
         self._prefix_cache_tokens = prefix_cache_tokens
@@ -1372,6 +1477,10 @@ class VecCluster:
     def fail_instance(self, idx: int):
         for gid in self.pool.fail_lane(int(self.lane_ids[idx])):
             self.central.appendleft(self.pool.objs[gid])
+
+    def set_trace(self, trace):
+        """Attach a TraceRecorder after construction (Cluster parity)."""
+        self.pool.trace = trace
 
     def sync_all(self):
         """Write every registered request's arena state back to its

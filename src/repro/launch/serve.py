@@ -6,6 +6,11 @@ instances or the calibrated simulator.
   PYTHONPATH=src python -m repro.launch.serve --mode gateway \
       --policy rl|mixing|jsq|rr --pattern bursty --queue-cap 64
 
+  # same, with lifecycle tracing + metrics export (serving.obs):
+  # trace.json opens in Perfetto, metrics.json/.prom is the scrape
+  PYTHONPATH=src python -m repro.launch.serve --mode gateway \
+      --trace trace.json --metrics-out metrics.json
+
   # gateway over real tiny engines on CPU
   PYTHONPATH=src python -m repro.launch.serve --mode gateway \
       --backend engine --policy mixing --requests 12
@@ -159,7 +164,12 @@ def serve_gateway(args):
                          backend=args.sim_backend,
                          default_deadline_s=args.deadline,
                          prefix_cache_tokens=args.prefix_cache,
-                         prefix_block=args.prefix_block)
+                         prefix_block=args.prefix_block,
+                         attribution=bool(args.metrics_out))
+    recorder = None
+    if args.trace:
+        from repro.serving import trace as trace_lib
+        recorder = trace_lib.TraceRecorder(sample=args.trace_sample)
     if args.backend == "engine":
         # tiny real engines: short random prompts, oracle-free routing
         # via the mixing heuristic (no content for the predictor)
@@ -178,7 +188,8 @@ def serve_gateway(args):
                 policy = make_gateway_policy(policy_name, cfg)
         else:
             policy = make_gateway_policy(policy_name, cfg)
-        gw = Gateway(gcfg, None, policy, cluster=cluster)
+        gw = Gateway(gcfg, None, policy, cluster=cluster,
+                     trace=recorder)
         rng = np.random.default_rng(0)
         reqs = [Request(prompt_tokens=int(rng.integers(10, 80)),
                         decode_tokens=int(rng.integers(5, 60)),
@@ -206,12 +217,30 @@ def serve_gateway(args):
                     _train_quick_agent(args, cfg, base), cfg)
         else:
             policy = make_gateway_policy(args.policy, cfg)
-        gw = Gateway(gcfg, profiles, policy, length=length)
+        gw = Gateway(gcfg, profiles, policy, length=length,
+                     trace=recorder)
         stats = gw.run(scn)
     print(f"policy={stats['policy']} served n={stats['n']} "
           f"admitted={stats['admitted']} shed={stats['shed']} "
           f"preemptions={stats['preemptions']}")
     print(format_snapshot(stats["snapshot"]))
+    if args.trace or args.metrics_out:
+        from repro.serving import obs
+        if args.trace:
+            doc = obs.write_trace(recorder, args.trace,
+                                  title=f"gateway-{stats['policy']}")
+            print(f"wrote {args.trace} "
+                  f"({len(doc['traceEvents'])} trace events, "
+                  f"{recorder.dropped} dropped)")
+        if args.metrics_out:
+            reg = obs.MetricsRegistry()
+            reg.ingest_snapshot(stats["snapshot"])
+            telemetry = getattr(getattr(gw.policy, "agent", None),
+                                "telemetry", None)
+            if telemetry is not None:
+                reg.ingest_rl(telemetry())
+            reg.save(args.metrics_out)
+            print(f"wrote {args.metrics_out} ({len(reg)} metrics)")
 
 
 def serve_engine(args):
@@ -271,6 +300,17 @@ def main():
                     "queries")
     ap.add_argument("--checkpoint", default=None,
                     help="router checkpoint dir for --policy rl")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="gateway: record request lifecycle spans and "
+                    "write a Chrome trace-event JSON (load in Perfetto "
+                    "/ chrome://tracing)")
+    ap.add_argument("--trace-sample", type=float, default=1.0,
+                    help="head-sampling fraction of requests traced")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="gateway: write the metrics registry (SLO "
+                    "snapshot + decision attribution + RL telemetry) "
+                    "as JSON, or Prometheus text if PATH ends in "
+                    ".prom")
     ap.add_argument("--calibrate", action="store_true",
                     help="sweep the reduced --arch engine and fit a "
                     "HardwareProfile (core.calibrate); prints fit "

@@ -28,6 +28,7 @@ from repro.common.config import ModelConfig
 from repro.core.prefix_cache import PrefixCache
 from repro.core.profiles import HardwareProfile
 from repro.models import model as model_lib
+from repro.serving import trace as _trace
 from repro.serving.request import Phase, Request
 from repro.serving.scheduler import InstanceScheduler
 
@@ -84,6 +85,14 @@ class LLMInstance:
         self.prefix_cache = (PrefixCache(prefix_cache_tokens,
                                          prefix_block)
                              if prefix_cache_tokens > 0 else None)
+        # lifecycle tracing (serving.trace).  The engine stamps
+        # TTFT/prefill_done one iteration earlier than the simulator
+        # (documented fidelity divergence); its trace events share that
+        # anchor.  ``trace_instance`` is the id used in events --
+        # EngineClusterAdapter.set_trace rewrites it to the adapter
+        # index so lanes line up with the gateway's routing ids.
+        self.trace = _trace.NULL
+        self.trace_instance = instance_id
 
     # -- router-visible state ----------------------------------------------
     @property
@@ -144,6 +153,13 @@ class LLMInstance:
                 # clock; it re-enters iteration_time as resident
                 # context below (same split as SimInstance)
                 prefill_tokens += req.prompt_tokens - cached
+                if self.trace.enabled:
+                    self.trace.emit(self.clock, _trace.EV_INST_ADMIT,
+                                    req.rid, self.trace_instance,
+                                    req.tenant, {"cached": int(cached)})
+                    self.trace.emit(self.clock, _trace.EV_PREFILL_DONE,
+                                    req.rid, self.trace_instance,
+                                    req.tenant)
         completions = self._decode_iteration()
         resident_other = max(self.resident_tokens() - prefill_tokens, 0)
         self.clock += self.profile.iteration_time(prefill_tokens,
@@ -177,16 +193,23 @@ class LLMInstance:
         toks = jnp.asarray(self.next_tokens)
         logits, self.cache = self.decode_fn(self.params, self.cache, toks)
         nxt = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
+        tr = self.trace
         for i in active:
             r = self.slots[i]
             r.decoded += 1
             if r.first_token is None:
                 r.first_token = self.clock
+                if tr.enabled:
+                    tr.emit(self.clock, _trace.EV_FIRST_TOKEN, r.rid,
+                            self.trace_instance, r.tenant)
             r.token_times.append(self.clock)
             self.next_tokens[i] = nxt[i]
             if r.decoded >= r.decode_tokens:
                 r.phase = Phase.DONE
                 r.finished = self.clock
+                if tr.enabled:
+                    tr.emit(self.clock, _trace.EV_COMPLETE, r.rid,
+                            self.trace_instance, r.tenant)
                 if self.prefix_cache is not None and r.full_hashes:
                     self.prefix_cache.insert(r.full_hashes)
                 self.completed.append(r)
@@ -202,6 +225,10 @@ class LLMInstance:
         _, i = max(cands)
         req = self.slots[i]
         self.slots[i] = None
+        if self.trace.enabled:
+            self.trace.emit(self.clock, _trace.EV_PREEMPT, req.rid,
+                            self.trace_instance, req.tenant,
+                            {"lost": int(req.prefilled + req.decoded)})
         req.reset_progress()
         self.queue.appendleft(req)
 
@@ -210,6 +237,9 @@ class LLMInstance:
         """Kill the instance; return in-flight + queued requests for
         re-routing (idempotent: their progress is reset)."""
         self.failed = True
+        if self.trace.enabled:
+            self.trace.emit(self.clock, _trace.EV_FAIL, -1,
+                            self.trace_instance)
         orphans = [r for r in self.slots if r is not None] + list(self.queue)
         self.slots = [None] * self.n_slots
         self.queue.clear()

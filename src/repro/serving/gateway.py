@@ -45,6 +45,7 @@ from repro.core import predictor as pred_lib
 from repro.core import rl_router as rl
 from repro.core import workload as wl
 from repro.core.simulator import Cluster
+from repro.serving import trace as tr_lib
 from repro.serving.metrics import SLO, StreamMetrics
 from repro.serving.request import Phase, Request, summarize
 
@@ -131,6 +132,11 @@ class MicroBatchPredictor:
             return req.predicted_decode
         return self.default_d
 
+    def bucket_of(self, decode_tokens: int) -> int:
+        """Ground-truth bucket for a realized decode length (drift
+        bucket-accuracy join in StreamMetrics)."""
+        return self.predictor.bucket_of(decode_tokens)
+
 
 # -- real-engine backend ----------------------------------------------------
 
@@ -209,6 +215,13 @@ class EngineClusterAdapter:
     def m(self) -> int:
         return len(self.engines)
 
+    def set_trace(self, trace):
+        """Attach a TraceRecorder to every engine (Cluster parity);
+        instance ids in the events are adapter indices."""
+        for i, e in enumerate(self.engines):
+            e.trace = trace
+            e.trace_instance = i
+
     def alive(self) -> List[int]:
         return [i for i, e in enumerate(self.engines) if not e.failed]
 
@@ -282,28 +295,51 @@ class GatewayConfig:
     # tenant-blind behaviour.
     tenant_weights: Optional[Dict[str, float]] = None
     default_tenant_weight: float = 1.0
+    # decision attribution: score every routing decision against the
+    # r_mixing yardstick and join it to the request's eventual actuals
+    # (per-policy regret + predictor drift in snapshot()).  Enabled
+    # implicitly whenever a trace recorder is attached.
+    attribution: bool = False
+    # counter-track cadence (simulated seconds) for queue depth / KV
+    # occupancy / backlog samples while tracing
+    trace_counter_every: float = 1.0
 
 
 class Gateway:
     """Event-driven serving gateway over a cluster backend."""
 
     def __init__(self, cfg: GatewayConfig, profiles, policy,
-                 length=None, cluster=None, scale_up_when=None):
+                 length=None, cluster=None, scale_up_when=None,
+                 trace=None):
         self.cfg = cfg
+        self.trace = trace if trace is not None else tr_lib.NULL
         if cluster is not None:
             self.cluster = cluster
+            if trace is not None:
+                set_tr = getattr(cluster, "set_trace", None)
+                if set_tr is not None:
+                    set_tr(trace)
         else:
             profiles = tuple(profiles)
             self.cluster = Cluster(
                 profiles, len(profiles), cfg.scheduler, cfg.dt,
                 cfg.chunked_prefill, cfg.n_slots, backend=cfg.backend,
                 prefix_cache_tokens=cfg.prefix_cache_tokens,
-                prefix_block=cfg.prefix_block)
+                prefix_block=cfg.prefix_block, trace=trace)
         self.policy = policy
         self.length = length or OracleLength()
         self.metrics = StreamMetrics(window=cfg.metrics_window,
                                      quantiles=cfg.quantiles,
                                      slo=cfg.slo)
+        # decision attribution (regret vs the r_mixing yardstick +
+        # predictor drift): on whenever requested or whenever tracing
+        # is -- the joined actuals feed snapshot()'s attribution block
+        self._attr = bool(cfg.attribution) or self.trace.enabled
+        if self._attr:
+            self.metrics.enable_attribution(
+                policy=getattr(policy, "name", "?"),
+                bucket_of=getattr(self.length, "bucket_of", None))
+        self._last_counter = -float("inf")
         self.shed: List[Request] = []
         self.cancelled: List[Request] = []
         # minimal autoscaling hook: ``scale_up_when(shed_rate, p95_e2e)``
@@ -331,21 +367,31 @@ class Gateway:
         if self.cfg.default_deadline_s is not None \
                 and req.deadline is None:
             req.deadline = req.arrival + self.cfg.default_deadline_s
+        tr = self.trace
         if self._queue_full() and not self._fair_evict_for(req):
             if self.cfg.on_full == "shed":
                 req.phase = Phase.SHED
                 self.shed.append(req)
                 self.metrics.on_shed(req.tenant)
+                if tr.enabled:
+                    tr.emit(self.cluster.t, tr_lib.EV_SHED, req.rid,
+                            -1, req.tenant)
             else:                       # defer: client-side overflow
                 self._overflow.append(req)
                 if req.deadline is not None:
                     self._overflow_deadlines = True
+                if tr.enabled:
+                    tr.emit(self.cluster.t, tr_lib.EV_DEFER, req.rid,
+                            -1, req.tenant)
             return
         self.cluster.enqueue(req)
         self._n_admitted += 1
         self._q_tenant[req.tenant] = \
             self._q_tenant.get(req.tenant, 0) + 1
         self.metrics.on_admit(req.tenant)
+        if tr.enabled:
+            tr.emit(self.cluster.t, tr_lib.EV_ADMIT, req.rid, -1,
+                    req.tenant)
 
     # -- weighted-fair shedding ----------------------------------------
     def _tenant_weight(self, tenant: str) -> float:
@@ -417,6 +463,10 @@ class Gateway:
             if victim.deadline is not None:
                 self._overflow_deadlines = True
             self.metrics.on_evict(tenant, shed=False)
+        if self.trace.enabled:
+            self.trace.emit(self.cluster.t, tr_lib.EV_EVICT,
+                            victim.rid, -1, tenant,
+                            {"mode": self.cfg.on_full})
         return True
 
     def _cancel_expired(self):
@@ -434,6 +484,9 @@ class Gateway:
                 req.phase = Phase.CANCELLED
                 self.cancelled.append(req)
                 self.metrics.on_cancel(req.tenant)
+                if self.trace.enabled:
+                    self.trace.emit(now, tr_lib.EV_CANCEL, req.rid,
+                                    -1, req.tenant)
             else:
                 keep.append(req)
         self._overflow = keep
@@ -447,6 +500,10 @@ class Gateway:
             self._q_tenant[req.tenant] = \
                 self._q_tenant.get(req.tenant, 0) + 1
             self.metrics.on_admit(req.tenant)
+            if self.trace.enabled:
+                self.trace.emit(self.cluster.t, tr_lib.EV_ADMIT,
+                                req.rid, -1, req.tenant,
+                                {"retry": True})
 
     def _maybe_scale_up(self):
         """Closed-loop elastic scale-out: fire the user predicate on
@@ -480,6 +537,7 @@ class Gateway:
     def _route_some(self):
         cfg = self.cfg
         cluster = self.cluster
+        tr = self.trace
         for _ in range(cfg.routes_per_tick):
             if not cluster.central:
                 return
@@ -487,6 +545,8 @@ class Gateway:
             d_hat = max(int(self.length.estimate(head)), 1)
             a = self.policy.route(cluster, head, d_hat)
             deferred = a is None or a >= cluster.m
+            scores = None
+            forced = False
             if deferred and cluster.t - head.arrival > cfg.defer_timeout:
                 # SLA watchdog: force the best-impact placement (the
                 # same override RoutingEnv.step applies)
@@ -494,12 +554,48 @@ class Gateway:
                                           cfg.alpha)
                 a = int(np.argmax(scores))
                 deferred = False
+                forced = True
             if deferred:
                 return
             self._q_tenant[head.tenant] -= 1
             if self._q_tenant[head.tenant] == 0:
                 del self._q_tenant[head.tenant]
+            if self._attr:
+                # uniform yardstick across ALL policies: the r_mixing
+                # score vector this decision faced.  Regret is the
+                # score gap to the mixing-argmax (0 for the heuristic
+                # itself) -- joined to actuals at completion time.
+                if scores is None:
+                    scores = rl.mixing_scores(cluster, head, d_hat,
+                                              cfg.alpha)
+                best = int(np.argmax(scores))
+                regret = float(scores[best] - scores[a])
+                self.metrics.on_decision(head, d_hat, regret,
+                                         agree=(a == best))
+                if tr.enabled:
+                    data = {"inst": int(a), "d_hat": int(d_hat),
+                            "wait": float(cluster.t - head.arrival),
+                            "regret": regret}
+                    if forced:
+                        data["forced"] = True
+                    explain = getattr(self.policy, "explain", None)
+                    if explain is not None:
+                        ex = explain(cluster, head, d_hat)
+                        if ex:
+                            data.update(ex)
+                    tr.emit(cluster.t, tr_lib.EV_ROUTE, head.rid,
+                            int(a), head.tenant, data)
             cluster.route(a)
+
+    def _sample_counters(self):
+        """Counter-track samples for the Perfetto export: router queue
+        depth plus per-instance KV occupancy and outstanding backlog."""
+        tr = self.trace
+        t = self.cluster.t
+        tr.counter(t, "queue_depth", len(self.cluster.central))
+        for i, inst in enumerate(self.cluster.instances):
+            tr.counter(t, "kv_tokens", inst.resident_token_sum(), i)
+            tr.counter(t, "backlog", inst.outstanding_tokens(), i)
 
     # -- serving loop --------------------------------------------------
     def run(self, scenario_or_requests, samples=None) -> Dict:
@@ -520,6 +616,7 @@ class Gateway:
         stream = [(requests[i], samples[i]) for i in order]
         cluster = self.cluster
         cfg = self.cfg
+        tr = self.trace
         i, n = 0, len(stream)
         while True:
             new: List[Tuple[Request, object]] = []
@@ -530,12 +627,20 @@ class Gateway:
                 self.length.prefetch(new)
             self._drain_overflow()      # deferred clients retry first
             for req, _ in new:
+                if tr.enabled:
+                    tr.emit(req.arrival, tr_lib.EV_ARRIVE, req.rid,
+                            -1, req.tenant,
+                            {"prompt": int(req.prompt_tokens)})
                 self._admit(req)
             self._route_some()
             for r in cluster.advance():
                 self.metrics.on_complete(r, r.tenant)
             self._drain_overflow()
             self._maybe_scale_up()
+            if tr.enabled and (cluster.t - self._last_counter
+                               >= cfg.trace_counter_every):
+                self._last_counter = cluster.t
+                self._sample_counters()
             if (i >= n and not self._overflow
                     and len(cluster.completed) >= self._n_admitted):
                 break

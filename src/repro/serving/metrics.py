@@ -34,7 +34,16 @@ class P2Quantile:
     """P-square single-quantile estimator: O(1) memory, O(1) update.
 
     Keeps 5 markers whose heights track the quantile ``q`` of everything
-    ever added; exact until 5 samples have arrived."""
+    ever added.  Small-n behavior: with fewer than 5 samples ``value()``
+    is the exact ``np.quantile`` of what has arrived; from the 5th
+    sample on it switches to the marker estimate, which needs on the
+    order of tens of samples to converge for tail quantiles (the middle
+    marker starts at the sample median and drifts toward ``q``).
+    Readers that must be accurate at tiny lifetime counts should keep
+    the early samples and use exact quantiles until the estimator has
+    warmed up -- ``_MetricTrack.report`` does exactly that (falls back
+    to ``np.quantile`` over the first ``_EXACT_KEEP`` samples while the
+    lifetime count is still within them)."""
 
     def __init__(self, q: float):
         if not 0.0 < q < 1.0:
@@ -161,15 +170,27 @@ class SLO:
 METRIC_KEYS = ("ttft", "tbt", "e2e")
 
 
+_EXACT_KEEP = 64      # early lifetime samples kept for exact small-n quantiles
+
+
 class _MetricTrack:
-    """One latency metric: sliding-window reservoir + lifetime P2 set."""
+    """One latency metric: sliding-window reservoir + lifetime P2 set.
+
+    The first ``_EXACT_KEEP`` lifetime samples are also kept verbatim:
+    while the lifetime count is still within that prefix the ``_life``
+    quantiles are exact (``np.quantile``) instead of the still-warming
+    P-square estimate, whose tail markers are unreliable at tens of
+    samples (see ``P2Quantile``)."""
 
     def __init__(self, window: float, quantiles: Sequence[float]):
         self.win = WindowedReservoir(window)
         self.p2 = {q: P2Quantile(q) for q in quantiles}
+        self._exact: list = []
 
     def add(self, t: float, x: float):
         self.win.add(t, x)
+        if len(self._exact) < _EXACT_KEEP:
+            self._exact.append(float(x))
         for est in self.p2.values():
             est.add(x)
 
@@ -178,8 +199,11 @@ class _MetricTrack:
         for q in quantiles:
             v = self.win.quantile(q, now)
             out[f"p{int(q * 100)}"] = v
+        small_n = 0 < self.win.total <= len(self._exact)
         for q, est in self.p2.items():
-            out[f"p{int(q * 100)}_life"] = est.value()
+            out[f"p{int(q * 100)}_life"] = (
+                float(np.quantile(self._exact, q)) if small_n
+                else est.value())
         out["n_window"] = len(self.win)
         out["n_life"] = self.win.total
         return out
@@ -196,6 +220,71 @@ class _TenantStats:
         self.slo_attained = 0
 
 
+class _Attribution:
+    """Joins routing decisions to request actuals.
+
+    At decision time the gateway records, per request: the length
+    estimate ``d_hat`` the policy saw, the regret of the chosen
+    instance against the r_mixing yardstick (``max(scores) -
+    scores[chosen]``, 0 when the policy picked the yardstick's argmax),
+    and whether it agreed with that argmax.  At completion the decision
+    is joined to the realized decode length, yielding predictor drift
+    (|d_hat - d| quantiles, bucket accuracy when the predictor exposes
+    ``bucket_of``) and per-policy decision quality in ``report()``.
+    Decisions whose request never completes (shed downstream, failed
+    instance) stay in ``open`` and are reported as ``unjoined``."""
+
+    def __init__(self, policy: str, bucket_of, window: float,
+                 quantiles: Sequence[float]):
+        self.policy = policy
+        self.bucket_of = bucket_of
+        self.quantiles = quantiles
+        self.open: Dict[int, Tuple[int, float, bool]] = {}
+        self.n_decisions = 0
+        self.n_agree = 0
+        self.regret = _MetricTrack(window, quantiles)
+        self.abs_err = _MetricTrack(window, quantiles)
+        self.n_joined = 0
+        self.bucket_hits = 0
+        self.bucket_total = 0
+
+    def on_decision(self, rid: int, d_hat: int, regret: float,
+                    agree: bool, now: float):
+        self.n_decisions += 1
+        self.n_agree += int(agree)
+        self.regret.add(now, max(float(regret), 0.0))
+        self.open[rid] = (int(d_hat), float(regret), bool(agree))
+
+    def on_complete(self, req: Request, now: float):
+        dec = self.open.pop(req.rid, None)
+        if dec is None:
+            return
+        d_hat, _, _ = dec
+        self.n_joined += 1
+        actual = int(req.decode_tokens)
+        self.abs_err.add(now, abs(d_hat - actual))
+        if self.bucket_of is not None:
+            self.bucket_total += 1
+            self.bucket_hits += int(self.bucket_of(d_hat)
+                                    == self.bucket_of(actual))
+
+    def report(self, now: float) -> Dict:
+        return {
+            "policy": self.policy,
+            "decisions": self.n_decisions,
+            "agree_rate": (self.n_agree / self.n_decisions
+                           if self.n_decisions else None),
+            "regret": self.regret.report(now, self.quantiles),
+            "drift": {
+                "joined": self.n_joined,
+                "unjoined": len(self.open),
+                "abs_err": self.abs_err.report(now, self.quantiles),
+                "bucket_accuracy": (self.bucket_hits / self.bucket_total
+                                    if self.bucket_total else None),
+            },
+        }
+
+
 @dataclass
 class StreamMetrics:
     """Rolling gateway metrics: call ``on_admit`` / ``on_shed`` /
@@ -208,6 +297,24 @@ class StreamMetrics:
     def __post_init__(self):
         self._all = _TenantStats(self.window, self.quantiles)
         self._tenants: Dict[str, _TenantStats] = {}
+        self._attr: Optional[_Attribution] = None
+
+    # -- decision attribution ------------------------------------------
+    def enable_attribution(self, policy: str = "?", bucket_of=None):
+        """Turn on routing-decision attribution.  ``bucket_of`` is the
+        length predictor's realized-length bucketizer (None when the
+        predictor has no bucket vocabulary, e.g. the oracle); idempotent
+        -- re-enabling keeps the existing join state."""
+        if self._attr is None:
+            self._attr = _Attribution(policy, bucket_of, self.window,
+                                      self.quantiles)
+
+    def on_decision(self, req: Request, d_hat: int, regret: float,
+                    agree: bool, now: Optional[float] = None):
+        """One routing decision (no-op until ``enable_attribution``)."""
+        if self._attr is not None:
+            t = now if now is not None else req.arrival
+            self._attr.on_decision(req.rid, d_hat, regret, agree, t)
 
     def _tenant(self, tenant: str) -> _TenantStats:
         st = self._tenants.get(tenant)
@@ -244,6 +351,8 @@ class StreamMetrics:
 
     def on_complete(self, req: Request, tenant: str = "default"):
         now = req.finished if req.finished is not None else 0.0
+        if self._attr is not None:
+            self._attr.on_complete(req, now)
         ok = self.slo.attained(req)
         for st in (self._all, self._tenant(tenant)):
             st.completed += 1
@@ -289,6 +398,8 @@ class StreamMetrics:
             else:
                 out["tenants"][t]["shed_burden"] = None
         out["shed_fairness"] = self.shed_fairness()
+        if self._attr is not None:
+            out["attribution"] = self._attr.report(now)
         return out
 
     def shed_fairness(self) -> Optional[float]:

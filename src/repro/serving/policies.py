@@ -27,6 +27,15 @@ from repro.core.prefix_cache import hit_fractions
 
 @runtime_checkable
 class RoutingPolicy(Protocol):
+    """Structural protocol: ``route`` is required.  Policies MAY also
+    provide ``explain(cluster, req, d_hat) -> dict`` returning the
+    per-instance score breakdown behind the same decision ``route``
+    would make (r_mixing terms, loads, cache-hit fractions, Q-values);
+    the gateway attaches it to the ``route`` trace event for decision
+    attribution.  ``explain`` must be read-only: it is called AFTER
+    ``route`` on the same state and must not perturb the decision
+    stream (the traced-vs-untraced overhead gate enforces this)."""
+
     name: str
 
     def route(self, cluster, req, d_hat: int) -> Optional[int]:
@@ -62,6 +71,12 @@ class LeastOutstandingWork:
         alive = cluster.alive()
         if not alive:
             return None
+        loads = self._loads(cluster, alive)
+        pick = alive[int(np.argmin(loads))]
+        self._est[req.rid] = d_hat
+        return pick
+
+    def _loads(self, cluster, alive):
         loads = []
         for i in alive:
             inst = cluster.instances[i]
@@ -73,9 +88,15 @@ class LeastOutstandingWork:
                 todo += r.prompt_tokens + self._est.get(r.rid,
                                                         r.decode_tokens)
             loads.append(todo)
-        pick = alive[int(np.argmin(loads))]
-        self._est[req.rid] = d_hat
-        return pick
+        return loads
+
+    def explain(self, cluster, req, d_hat: int) -> dict:
+        """Estimated outstanding-token load per alive instance (the
+        argmin is the pick)."""
+        alive = cluster.alive()
+        return {"loads": [float(x)
+                          for x in self._loads(cluster, alive)],
+                "alive": list(alive)}
 
 
 class PrefixAffinityPolicy:
@@ -97,6 +118,14 @@ class PrefixAffinityPolicy:
             return tied[0]
         loads = [cluster.instances[i].outstanding_tokens() for i in tied]
         return tied[int(np.argmin(loads))]
+
+    def explain(self, cluster, req, d_hat: int) -> dict:
+        """Per-instance cached-prefix hit fraction + the tie-break
+        outstanding-token loads."""
+        return {"hit_frac": [float(f)
+                             for f in hit_fractions(cluster, req)],
+                "loads": [float(inst.outstanding_tokens())
+                          for inst in cluster.instances]}
 
 
 class MixingImpactPolicy:
@@ -125,6 +154,21 @@ class MixingImpactPolicy:
                                         self.defer_prior_bias)
         a = int(np.argmax(bonus))
         return a if a < cluster.m else None
+
+    def explain(self, cluster, req, d_hat: int) -> dict:
+        """The r_mixing score vector (with this policy's cache weight)
+        and the capacity-corrected guidance bonus whose argmax is the
+        decision."""
+        scores = rl.mixing_scores(cluster, req, d_hat, self.alpha,
+                                  cache_weight=self.cache_weight)
+        bonus = rl.guidance_from_scores(cluster, req, d_hat, scores,
+                                        self.defer_prior_bias)
+        out = {"scores": [float(s) for s in scores],
+               "bonus": [float(b) for b in bonus]}
+        if self.cache_weight:
+            out["hit_frac"] = [float(f)
+                               for f in hit_fractions(cluster, req)]
+        return out
 
 
 class RLPolicy:
@@ -163,6 +207,49 @@ class RLPolicy:
         # guidance heuristic (same degradation as ManagedCluster)
         bonus[~mask] = -np.inf
         return int(np.argmax(bonus))
+
+    def explain(self, cluster, req, d_hat: int) -> dict:
+        """Decompose the greedy decision: raw Q-values, the guidance
+        prior actually added, and the selection vector ``sel`` whose
+        masked argmax is the action ``route`` returns."""
+        from repro.core import dqn
+        cfg = self.cfg
+        mask = state_lib.action_mask(cluster)
+        w_sel = cfg.guidance_floor if cfg.variant == "guided" else 0.0
+        scores = rl.mixing_scores(cluster, req, d_hat, cfg.alpha,
+                                  cache_weight=cfg.cache_weight)
+        bonus = rl.guidance_from_scores(cluster, req, d_hat, scores,
+                                        cfg.defer_prior_bias)
+        out = {"scores": [float(s) for s in scores],
+               "bonus": [float(b) for b in bonus]}
+        if not (self.agent.cfg.q_arch == "decomposed"
+                or cluster.m + 1 == self.agent.cfg.n_actions):
+            sel = np.where(mask, bonus, -np.inf)
+            out["sel"] = [float(x) for x in sel]
+            out["fallback"] = True
+            return out
+        s = state_lib.featurize(
+            cluster, cluster.profile, n_buckets=cfg.n_buckets,
+            include_impact=cfg.include_impact_features,
+            predict_decode=lambda r: d_hat, alpha=cfg.alpha,
+            include_hardware=cfg.include_hardware_features,
+            include_cache=cfg.include_cache_features)
+        q = np.asarray(dqn.q_values(self.agent.cfg, self.agent.params,
+                                    np.asarray(s, np.float32)[None]))[0]
+        out["q"] = [float(x) for x in q]
+        sel = q.astype(np.float64).copy()
+        squash = cfg.q_squash if w_sel else 0.0
+        if squash > 0:
+            masked = np.where(mask, sel, -np.inf)
+            ref = float(masked.max()) if np.isfinite(masked).any() else 0.0
+            sel = squash * np.tanh(sel - ref)
+        if w_sel:
+            prior = w_sel * bonus
+            out["prior"] = [float(x) for x in prior]
+            sel = sel + prior
+        sel[~mask] = -np.inf
+        out["sel"] = [float(x) for x in sel]
+        return out
 
 
 class LegacyPolicyAdapter:

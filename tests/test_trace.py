@@ -1,0 +1,436 @@
+"""Tracing & telemetry: recorder semantics, py-vs-vec event-stream
+parity, Chrome-trace / metrics-registry export, decision attribution,
+and the P2 small-n fallback satellite."""
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core.policies import make_policy
+from repro.core.profiles import V100_LLAMA2_7B
+from repro.core.simulator import Cluster, run_heuristic
+from repro.core.workload import generate, make_tenant_scenario, to_requests
+from repro.serving import obs
+from repro.serving import trace as tr
+from repro.serving.gateway import Gateway, GatewayConfig
+from repro.serving.metrics import P2Quantile, StreamMetrics, _MetricTrack
+from repro.serving.policies import make_gateway_policy
+
+PROF = V100_LLAMA2_7B
+
+
+def _reqs(n, seed=0, rate=20.0):
+    return to_requests(generate(n, seed=seed), rate=rate, seed=seed + 1)
+
+
+def _normalized(recorder, requests):
+    """Event stream with rids rebased to arrival-order indices, so two
+    runs over freshly-built copies of the same scenario (whose Request
+    rids differ by a global autoincrement offset) compare equal."""
+    rid_map = {r.rid: i for i, r in
+               enumerate(sorted(requests, key=lambda r: r.rid))}
+    out = []
+    for t, etype, rid, inst, tenant, data in recorder.events():
+        out.append((t, etype, rid_map.get(rid, rid), inst, tenant, data))
+    return out
+
+
+# -- recorder semantics ------------------------------------------------------
+
+def test_ring_buffer_capacity_and_dropped():
+    rec = tr.TraceRecorder(capacity=8)
+    for i in range(20):
+        rec.emit(float(i), tr.EV_ARRIVE, i)
+    assert len(rec) == 8
+    assert rec.dropped == 12
+    assert rec.n_emitted == 20
+    # oldest dropped first: the retained window is the last 8
+    assert [e[2] for e in rec.events()] == list(range(12, 20))
+
+
+def test_head_sampling_is_deterministic_and_whole_request():
+    a = tr.TraceRecorder(sample=0.5, seed=3)
+    b = tr.TraceRecorder(sample=0.5, seed=3)
+    kept = {rid for rid in range(500) if a.sampled(rid)}
+    assert kept == {rid for rid in range(500) if b.sampled(rid)}
+    assert 100 < len(kept) < 400          # roughly half
+    for rid in range(500):                # every event of a kept rid
+        a.emit(0.0, tr.EV_ARRIVE, rid)
+        a.emit(1.0, tr.EV_COMPLETE, rid, 0)
+    rids = {e[2] for e in a.events()}
+    assert rids == kept
+    counts = {rid: 0 for rid in kept}
+    for e in a.raw_events():
+        counts[e[2]] += 1
+    assert set(counts.values()) == {2}
+    # different seed -> different (deterministic) subset
+    c = tr.TraceRecorder(sample=0.5, seed=4)
+    assert kept != {rid for rid in range(500) if c.sampled(rid)}
+
+
+def test_instance_fail_event_bypasses_sampling():
+    rec = tr.TraceRecorder(sample=0.0)
+    rec.emit(1.0, tr.EV_ARRIVE, 7)
+    rec.emit(2.0, tr.EV_FAIL, -1, 3)
+    evs = rec.events()
+    assert len(evs) == 1 and evs[0][1] == tr.EV_FAIL
+
+
+def test_canonical_order_is_lifecycle_order_within_a_tick():
+    rec = tr.TraceRecorder()
+    rec.emit(1.0, tr.EV_COMPLETE, 0, 1)
+    rec.emit(1.0, tr.EV_FIRST_TOKEN, 0, 1)
+    rec.emit(1.0, tr.EV_PREFILL_DONE, 0, 1)
+    rec.emit(0.5, tr.EV_ARRIVE, 1)
+    assert [e[1] for e in rec.events()] == [
+        tr.EV_ARRIVE, tr.EV_PREFILL_DONE, tr.EV_FIRST_TOKEN,
+        tr.EV_COMPLETE]
+
+
+def test_null_recorder_is_disabled_noop():
+    assert not tr.NULL.enabled
+    tr.NULL.emit(0.0, tr.EV_ARRIVE, 0)
+    tr.NULL.counter(0.0, "queue_depth", 1.0)
+    assert len(tr.NULL) == 0
+
+
+# -- py-vs-vec event-stream parity -------------------------------------------
+
+@pytest.mark.parametrize("m,chunk,sched", [
+    (3, 0, "fcfs"),
+    (2, 128, "fcfs"),
+    (3, 0, "bin_packing"),
+])
+def test_sim_event_parity_py_vs_vec(m, chunk, sched):
+    streams = []
+    for backend in ("py", "vec"):
+        rs = _reqs(120, seed=3)
+        rec = tr.TraceRecorder()
+        cluster = Cluster(PROF, m, scheduler=sched,
+                          chunked_prefill=chunk, backend=backend,
+                          trace=rec)
+        run_heuristic(cluster, rs, make_policy("round_robin", PROF))
+        streams.append(_normalized(rec, rs))
+    assert streams[0], "py backend recorded no events"
+    assert streams[0] == streams[1]
+
+
+def test_sim_event_parity_with_instance_failure():
+    streams = []
+    for backend in ("py", "vec"):
+        rs = _reqs(80, seed=11)
+        rec = tr.TraceRecorder()
+        cluster = Cluster(PROF, 3, backend=backend, trace=rec)
+        pending = sorted(rs, key=lambda r: r.arrival)
+        i, rr, failed = 0, 0, False
+        while len(cluster.completed) < len(rs) and cluster.t < 3000:
+            while i < len(pending) and pending[i].arrival <= cluster.t:
+                cluster.enqueue(pending[i])
+                i += 1
+            if cluster.t > 1.0 and not failed:
+                cluster.fail_instance(0)
+                failed = True
+            alive = cluster.alive()
+            while cluster.central and alive:
+                cluster.route(alive[rr % len(alive)])
+                rr += 1
+                alive = cluster.alive()
+            cluster.advance()
+        assert len(cluster.completed) == len(rs)
+        streams.append(_normalized(rec, rs))
+    fails = [e for e in streams[0] if e[1] == tr.EV_FAIL]
+    assert len(fails) == 1 and fails[0][3] == 0
+    assert streams[0] == streams[1]
+
+
+def test_gateway_event_parity_py_vs_vec():
+    streams = []
+    for backend in ("py", "vec"):
+        scn = make_tenant_scenario(seed=9, n_requests=100, rate=8.0,
+                                   profiles=(PROF,) * 3)
+        rec = tr.TraceRecorder()
+        gw = Gateway(GatewayConfig(backend=backend), (PROF,) * 3,
+                     make_gateway_policy("mixing"), trace=rec)
+        gw.run(scn)
+        streams.append(_normalized(rec, scn.requests))
+    types = {e[1] for e in streams[0]}
+    assert {tr.EV_ARRIVE, tr.EV_ADMIT, tr.EV_ROUTE, tr.EV_INST_ADMIT,
+            tr.EV_PREFILL_DONE, tr.EV_FIRST_TOKEN,
+            tr.EV_COMPLETE} <= types
+    assert streams[0] == streams[1]
+
+
+def test_tracing_is_an_observer_snapshot_identical():
+    """A fully-traced gateway run must reproduce the untraced run's
+    simulated metrics bit-for-bit (events never advance the clock)."""
+    snaps = []
+    for trace in (None, tr.TraceRecorder()):
+        scn = make_tenant_scenario(seed=5, n_requests=80, rate=8.0,
+                                   profiles=(PROF,) * 2)
+        gw = Gateway(GatewayConfig(), (PROF,) * 2,
+                     make_gateway_policy("mixing"), trace=trace)
+        stats = gw.run(scn)
+        snap = stats["snapshot"]
+        snaps.append((snap["e2e"]["p95"], snap["e2e"]["p50"],
+                      snap["ttft"]["p95"], stats["preemptions"],
+                      stats["n"]))
+    assert snaps[0] == snaps[1]
+
+
+# -- Chrome trace export -----------------------------------------------------
+
+GOLDEN = os.path.join(os.path.dirname(__file__), "data",
+                      "golden_trace.json")
+
+
+def _golden_run():
+    """Tiny deterministic traced gateway run (the committed snapshot).
+    Rids are rebased to 0..n-1 -- the only run-to-run variance is the
+    Request rid autoincrement's global offset."""
+    scn = make_tenant_scenario(seed=2, n_requests=15, rate=6.0,
+                               profiles=(PROF,) * 2)
+    base = min(r.rid for r in scn.requests)
+    rec = tr.TraceRecorder()
+    gw = Gateway(GatewayConfig(), (PROF,) * 2,
+                 make_gateway_policy("mixing"), trace=rec)
+    gw.run(scn)
+    doc = obs.chrome_trace(rec, title="golden")
+    for e in doc["traceEvents"]:
+        rid = e.get("args", {}).get("rid")
+        if rid is not None and rid >= 0:
+            e["args"]["rid"] = rid - base
+    return doc
+
+
+def test_chrome_trace_matches_golden_snapshot():
+    doc = _golden_run()
+    assert obs.validate_chrome_trace(doc) == []
+    with open(GOLDEN) as f:
+        golden = json.load(f)
+    # compare through a JSON round-trip so float repr is identical
+    assert json.loads(json.dumps(doc)) == golden
+
+
+def test_chrome_trace_structure():
+    doc = _golden_run()
+    evs = doc["traceEvents"]
+    pids = {e["pid"] for e in evs}
+    assert pids == {0, 1, 2}              # router + 2 instances
+    names = {e["name"] for e in evs if e["ph"] == "X"}
+    assert names == {"queued", "prefill", "decode"}
+    counters = {e["name"] for e in evs if e["ph"] == "C"}
+    assert {"queue_depth", "kv_tokens", "backlog"} <= counters
+    # spans on one lane never overlap (greedy packing invariant)
+    lanes = {}
+    for e in evs:
+        if e["ph"] == "X":
+            lanes.setdefault((e["pid"], e["tid"]), []).append(
+                (e["ts"], e["ts"] + e["dur"]))
+    for spans in lanes.values():
+        spans.sort()
+        for (_, end0), (start1, _) in zip(spans, spans[1:]):
+            assert start1 >= end0
+
+
+def test_validate_chrome_trace_rejects_malformed():
+    assert obs.validate_chrome_trace([]) != []
+    assert obs.validate_chrome_trace({}) != []
+    bad_ph = {"traceEvents": [
+        {"name": "x", "ph": "Z", "pid": 0, "ts": 0.0}]}
+    assert any("ph" in e for e in obs.validate_chrome_trace(bad_ph))
+    no_dur = {"traceEvents": [
+        {"name": "x", "ph": "X", "pid": 0, "ts": 0.0}]}
+    assert any("dur" in e for e in obs.validate_chrome_trace(no_dur))
+    neg_ts = {"traceEvents": [
+        {"name": "x", "ph": "i", "pid": 0, "ts": -1.0}]}
+    assert any("ts" in e for e in obs.validate_chrome_trace(neg_ts))
+    empty_c = {"traceEvents": [
+        {"name": "x", "ph": "C", "pid": 0, "ts": 0.0, "args": {}}]}
+    assert any("args" in e for e in obs.validate_chrome_trace(empty_c))
+
+
+def test_obs_cli_validates_and_rejects(tmp_path):
+    good = tmp_path / "good.json"
+    with open(good, "w") as f:
+        json.dump(_golden_run(), f)
+    bad = tmp_path / "bad.json"
+    with open(bad, "w") as f:
+        json.dump({"traceEvents": [{"ph": "X"}]}, f)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(
+        os.path.dirname(os.path.dirname(__file__)), "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    ok = subprocess.run(
+        [sys.executable, "-m", "repro.serving.obs", "--validate",
+         str(good)], env=env, capture_output=True, text=True)
+    assert ok.returncode == 0, ok.stderr
+    fail = subprocess.run(
+        [sys.executable, "-m", "repro.serving.obs", "--validate",
+         str(bad)], env=env, capture_output=True, text=True)
+    assert fail.returncode == 1
+    assert "INVALID" in fail.stdout
+
+
+# -- decision attribution ----------------------------------------------------
+
+def test_attribution_joins_decisions_to_actuals():
+    scn = make_tenant_scenario(seed=7, n_requests=80, rate=8.0,
+                               profiles=(PROF,) * 3)
+    gw = Gateway(GatewayConfig(attribution=True), (PROF,) * 3,
+                 make_gateway_policy("mixing"))
+    stats = gw.run(scn)
+    at = stats["snapshot"]["attribution"]
+    assert at["policy"] == "mixing"
+    assert at["decisions"] >= stats["n"]
+    assert at["drift"]["joined"] == stats["n"]
+    # mixing IS the yardstick -> zero regret, full agreement
+    assert at["agree_rate"] == 1.0
+    assert at["regret"]["p95"] == 0.0
+    # oracle length predictor -> zero drift, no bucket vocabulary
+    assert at["drift"]["abs_err"]["p95"] == 0.0
+    assert at["drift"]["bucket_accuracy"] is None
+
+
+def test_attribution_nonzero_regret_for_blind_policy():
+    scn = make_tenant_scenario(seed=7, n_requests=80, rate=8.0,
+                               profiles=(PROF,) * 3)
+    gw = Gateway(GatewayConfig(attribution=True), (PROF,) * 3,
+                 make_gateway_policy("rr"))
+    stats = gw.run(scn)
+    at = stats["snapshot"]["attribution"]
+    assert at["policy"] == "rr"
+    assert at["agree_rate"] < 1.0
+    assert at["regret"]["p95"] > 0.0
+
+
+def test_attribution_bucketed_predictor_reports_bucket_accuracy():
+    sm = StreamMetrics()
+    sm.enable_attribution(policy="p", bucket_of=lambda d: min(d // 100,
+                                                              3))
+    reqs = _reqs(20, seed=1)
+    for i, r in enumerate(reqs):
+        d_hat = r.decode_tokens if i % 2 == 0 else r.decode_tokens + 400
+        sm.on_decision(r, d_hat, regret=0.1 * i, agree=(i % 2 == 0))
+        r.finished = float(i + 1)
+        r.first_token = float(i)
+        sm.on_complete(r)
+    at = sm.snapshot(now=30.0)["attribution"]
+    assert at["decisions"] == 20 and at["drift"]["joined"] == 20
+    assert at["agree_rate"] == 0.5
+    assert 0.0 < at["drift"]["bucket_accuracy"] <= 1.0
+    assert at["drift"]["abs_err"]["p50"] > 0.0
+
+
+def test_explain_breakdown_matches_route_decision():
+    scn = make_tenant_scenario(seed=4, n_requests=30, rate=6.0,
+                               profiles=(PROF,) * 3)
+    cluster = Cluster(PROF, 3)
+    for name, key in (("jsq", "loads"), ("sticky", "hit_frac"),
+                      ("mixing", "bonus")):
+        pol = make_gateway_policy(name)
+        req = scn.requests[0]
+        a = pol.route(cluster, req, d_hat=50)
+        ex = pol.explain(cluster, req, d_hat=50)
+        assert key in ex and len(ex[key]) >= 3
+        if name == "jsq":
+            assert a == ex["alive"][int(np.argmin(ex["loads"]))]
+        if name == "mixing":
+            assert a == int(np.argmax(ex["bonus"]))
+
+
+def test_route_events_carry_explain_payload():
+    scn = make_tenant_scenario(seed=4, n_requests=40, rate=6.0,
+                               profiles=(PROF,) * 3)
+    rec = tr.TraceRecorder()
+    gw = Gateway(GatewayConfig(), (PROF,) * 3,
+                 make_gateway_policy("mixing"), trace=rec)
+    gw.run(scn)
+    routes = [e for e in rec.events() if e[1] == tr.EV_ROUTE]
+    assert routes
+    for e in routes:
+        data = e[5]
+        assert data["inst"] == e[3]
+        assert "d_hat" in data and "regret" in data
+        assert len(data["scores"]) == 3
+        assert data.get("forced") \
+            or int(np.argmax(data["bonus"])) == data["inst"]
+
+
+# -- metrics registry --------------------------------------------------------
+
+def test_registry_flattens_and_renders_prometheus(tmp_path):
+    reg = obs.MetricsRegistry()
+    reg.ingest_snapshot({"e2e": {"p95": 1.5, "n_window": 10},
+                         "slo_rate": 0.9,
+                         "tenants": {"a-b": {"shed": 2}},
+                         "skipped": None,
+                         "label": "text-not-a-number"})
+    j = reg.to_json()
+    assert j["gateway_e2e_p95"] == 1.5
+    assert j["gateway_tenants_a_b_shed"] == 2.0
+    assert "gateway_skipped" not in j and "gateway_label" not in j
+    prom = reg.to_prometheus()
+    assert "# TYPE gateway_e2e_p95 gauge" in prom
+    assert "gateway_e2e_p95 1.5" in prom
+    for line in prom.splitlines():
+        if not line.startswith("#"):
+            name, val = line.split()
+            float(val)
+            assert name == obs._metric_name(name)
+    path = tmp_path / "m.json"
+    reg.save(str(path))
+    assert json.load(open(path)) == j
+    ppath = tmp_path / "m.prom"
+    reg.save(str(ppath))
+    assert open(ppath).read() == prom
+
+
+def test_registry_ingests_rl_telemetry():
+    from repro.core import rl_router as rl
+    agent = rl.make_agent(rl.RouterConfig(n_instances=3), m=3)
+    reg = obs.MetricsRegistry()
+    reg.ingest_rl(agent.telemetry())
+    j = reg.to_json()
+    assert j["rl_learn_steps"] == 0.0
+    assert j["rl_replay_size"] == 0.0
+
+
+# -- P2 small-n fallback (satellite) -----------------------------------------
+
+@pytest.mark.parametrize("n", [1, 3, 7, 20, 64])
+def test_metric_track_life_quantiles_exact_for_short_streams(n):
+    rng = np.random.default_rng(n)
+    xs = rng.lognormal(0.0, 1.0, size=n)
+    track = _MetricTrack(window=1e9, quantiles=(0.5, 0.95, 0.99))
+    for i, x in enumerate(xs):
+        track.add(float(i), float(x))
+    rep = track.report(now=float(n), quantiles=(0.5, 0.95, 0.99))
+    for q in (0.5, 0.95, 0.99):
+        exact = float(np.quantile(xs, q))
+        assert rep[f"p{int(q * 100)}_life"] == pytest.approx(exact), \
+            (n, q)
+
+
+def test_p2_converges_on_long_streams():
+    rng = np.random.default_rng(0)
+    xs = rng.lognormal(0.0, 0.5, size=20000)
+    track = _MetricTrack(window=1e9, quantiles=(0.5, 0.95))
+    for i, x in enumerate(xs):
+        track.add(float(i), float(x))
+    rep = track.report(now=2e4, quantiles=(0.5, 0.95))
+    for q in (0.5, 0.95):
+        exact = float(np.quantile(xs, q))
+        assert rep[f"p{int(q * 100)}_life"] == pytest.approx(
+            exact, rel=0.05), q
+
+
+def test_p2_exact_below_five_samples():
+    est = P2Quantile(0.95)
+    assert est.value() is None
+    for x in (3.0, 1.0, 2.0):
+        est.add(x)
+    assert est.value() == pytest.approx(float(np.quantile(
+        [3.0, 1.0, 2.0], 0.95)))
