@@ -43,6 +43,7 @@ MODULES = [
     ("scale_trace", "benchmarks.bench_scale_trace"),
     ("prefix_cache", "benchmarks.bench_prefix_cache"),
     ("roofline", "benchmarks.bench_roofline"),
+    ("chaos", "benchmarks.bench_chaos"),
 ]
 
 

@@ -34,7 +34,8 @@ LOWER_IS_BETTER = ("p50", "p95", "p99", "e2e", "ttft", "tbt", "us",
                    "seconds", "preempt", "shed", "loss", "wait",
                    "makespan", "spikes", "overhead")
 HIGHER_IS_BETTER = ("acc", "bucket_acc", "slo", "speedup", "eps",
-                    "throughput", "attain", "r2", "within", "fairness")
+                    "throughput", "attain", "r2", "within",
+                    "fairness", "goodput")
 
 _NUM = re.compile(r"([A-Za-z_][\w.]*)=(-?\d+(?:\.\d+)?(?:e-?\d+)?)")
 

@@ -116,7 +116,8 @@ class _Slot:
         m = self.env.m
         self.s_pad = state_lib.pad_state(
             s, m, m_max, cfg.include_impact_features,
-            cfg.include_hardware_features, cfg.include_cache_features)
+            cfg.include_hardware_features, cfg.include_cache_features,
+            cfg.include_health_features)
         self.mask_pad = state_lib.pad_mask(self.env.mask(), m, m_max)
 
     def prior_pad(self, m_max: int) -> Optional[np.ndarray]:
@@ -311,7 +312,8 @@ def train_batched(cfg: rl.RouterConfig,
                 include_impact=cfg.include_impact_features,
                 alpha=cfg.alpha,
                 include_hardware=cfg.include_hardware_features,
-                include_cache=cfg.include_cache_features)
+                include_cache=cfg.include_cache_features,
+                include_health=cfg.include_health_features)
         for i, sl in enumerate(slots):
             a_pad = int(acts[i])
             s_prev_pad = sl.s_pad

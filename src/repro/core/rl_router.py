@@ -72,6 +72,11 @@ class RouterConfig:
     prefix_cache_tokens: int = 0
     prefix_block: int = 32
     cache_weight: float = 0.0
+    # gateway health block (serving.chaos.HealthTracker): per-instance
+    # degradation score + straggler slowdown join the state so the agent
+    # can route around degraded nodes before the breaker trips.  Off by
+    # default: existing checkpoints keep their state shape.
+    include_health_features: bool = False
     reward_scale: float = 300.0
     q_squash: float = 0.05       # bound on Q's selection influence (guided)
     q_arch: str = "mlp"              # "mlp" (paper) | "decomposed" (ours)
@@ -110,6 +115,12 @@ class RouterConfig:
     seed: int = 0
 
 
+#: mixing-score penalty for an instance the gateway's circuit breaker
+#: has opened on -- large enough to lose every argmax against a healthy
+#: candidate, finite so a fully-breakered fleet still routes somewhere
+HEALTH_PENALTY = 0.75
+
+
 def mixing_scores(cluster, req: Request, d_hat: int,
                   alpha: float = 0.5,
                   cache_weight: float = 0.0) -> np.ndarray:
@@ -143,6 +154,13 @@ def mixing_scores(cluster, req: Request, d_hat: int,
         # failed lanes stay -inf (-inf + finite == -inf)
         scores = scores + cache_weight * np.asarray(
             prefix_cache.hit_fractions(cluster, req))
+    hm = getattr(cluster, "health_mask", None)
+    if hm is not None:
+        # breakered-but-alive instances get a finite penalty (identical
+        # np ops on both backends, so scores stay bit-exact py-vs-vec)
+        k = min(cluster.m, len(hm))
+        scores[:k] = scores[:k] + np.where(
+            np.asarray(hm[:k], bool), 0.0, -HEALTH_PENALTY)
     return scores
 
 
@@ -292,7 +310,8 @@ class RoutingEnv:
             include_impact=self.cfg.include_impact_features,
             predict_decode=self.predict_decode, alpha=self.cfg.alpha,
             include_hardware=self.cfg.include_hardware_features,
-            include_cache=self.cfg.include_cache_features)
+            include_cache=self.cfg.include_cache_features,
+            include_health=self.cfg.include_health_features)
 
     def mask(self) -> np.ndarray:
         return state_lib.action_mask(self.cluster)
@@ -460,11 +479,13 @@ def make_agent(cfg: RouterConfig, m: Optional[int] = None) -> DQNAgent:
     m = m or cfg.n_instances
     inst_dims = state_lib.instance_dims(cfg.include_impact_features,
                                         cfg.include_hardware_features,
-                                        cfg.include_cache_features)
+                                        cfg.include_cache_features,
+                                        cfg.include_health_features)
     dcfg = DQNConfig(
         state_dim=state_lib.state_dim(m, cfg.include_impact_features,
                                       cfg.include_hardware_features,
-                                      cfg.include_cache_features),
+                                      cfg.include_cache_features,
+                                      cfg.include_health_features),
         n_actions=m + 1, hidden=cfg.hidden,
         gamma=cfg.gamma, lr=cfg.lr, q_arch=cfg.q_arch,
         inst_dims=inst_dims, router_dims=state_lib.ROUTER_DIMS,

@@ -49,6 +49,9 @@ class SimInstance:
         self.clock = 0.0
         self.completed: List[Request] = []
         self.failed = False
+        # straggler model: scales every iteration time (1.0 = nominal);
+        # mirrored bit-exactly as the vecsim ``speed`` lane array
+        self.speed_factor = 1.0
         self.spikes: List[float] = []           # iteration times > 2x base
         self._admit_seq = 0
         # observer hooks (the RL env maintains its backlog penalty
@@ -187,8 +190,9 @@ class SimInstance:
         decoding = [r for r in self.residents if r.phase is Phase.DECODE]
         # iteration time (spikes when prefill mixes in -- Fig. 1a);
         # resident-other is the pre-prefill context sum
-        it_time = profile.iteration_time(prefill_tokens, rts)
-        if it_time > 2.0 * profile.t_decode_base:
+        it_time = profile.iteration_time(prefill_tokens, rts) \
+            * self.speed_factor
+        if it_time > 2.0 * profile.t_decode_base * self.speed_factor:
             self.spikes.append(it_time)
         self.clock += it_time
         rts += prefill_tokens
@@ -262,10 +266,52 @@ class SimInstance:
             r.reset_progress()
             r.phase = Phase.QUEUED
             r.instance = None
+            # the attempt died: clear its timing stamps so TTFT/TBT/E2E
+            # measure the attempt that actually serves the request (a
+            # stale first_token would anchor TTFT at the dead node)
+            r.first_token = None
+            r.token_times = []
+            r.prefill_done = None
         return orphans
+
+    def recover(self):
+        """Undo :meth:`fail`: the node comes back *empty* (no residents,
+        cold prefix cache) at its current clock and resumes accepting
+        work.  Emits ``recover`` so traces show the outage window."""
+        self.failed = False
+        if self.trace.enabled:
+            self.trace.emit(self.clock, _trace.EV_RECOVER, -1,
+                            self.instance_id)
 
     def restore(self):
         self.failed = False
+
+    def steal(self, req: Request) -> bool:
+        """Withdraw a routed request (hedged re-dispatch): remove it
+        from this instance's queue or residents, reset its progress and
+        timing stamps, and hand it back to the caller.  Returns False if
+        the request is no longer here (completed this tick)."""
+        if req in self.residents:
+            self.residents.remove(req)
+            self._rts -= req.prefilled + req.decoded
+            self._out -= ((req.prompt_tokens - req.prefilled)
+                          + (req.decode_tokens - req.decoded))
+            if self.on_preempt is not None:
+                self.on_preempt(req)
+        else:
+            try:
+                self.queue.remove(req)
+            except ValueError:
+                return False
+            self._qps -= req.prompt_tokens
+            self._out -= req.prompt_tokens + req.decode_tokens
+        req.reset_progress()
+        req.phase = Phase.QUEUED
+        req.instance = None
+        req.first_token = None
+        req.token_times = []
+        req.prefill_done = None
+        return True
 
 
 class Cluster:
@@ -381,11 +427,35 @@ class Cluster:
         self.profiles = self.profiles + (inst.profile,)
         return inst.instance_id
 
-    def fail_instance(self, idx: int):
+    def fail_instance(self, idx: int, requeue: bool = True) -> List[Request]:
         """Node failure: orphaned requests are requeued centrally
-        (idempotent request ids; progress restarts)."""
-        for r in self.instances[idx].fail():
-            self.central.appendleft(r)
+        (default; idempotent request ids, progress restarts) or -- with
+        ``requeue=False`` -- returned for the caller's failover machinery
+        (the gateway's bounded-retry path) to take ownership of."""
+        orphans = self.instances[idx].fail()
+        if requeue:
+            for r in orphans:
+                self.central.appendleft(r)
+        return orphans
+
+    def recover_instance(self, idx: int):
+        """Bring a failed instance back into service at the cluster
+        clock; policies see it in ``alive()`` from the next decision."""
+        inst = self.instances[idx]
+        inst.clock = max(inst.clock, self.t)
+        inst.recover()
+
+    def set_speed_factor(self, idx: int, factor: float):
+        """Straggler injection: scale instance ``idx``'s iteration times
+        (1.0 = nominal, 2.0 = half speed)."""
+        self.instances[idx].speed_factor = float(factor)
+
+    def steal(self, req: Request) -> bool:
+        """Withdraw a routed-but-tokenless request for hedged
+        re-dispatch (see SimInstance.steal)."""
+        if req.instance is None:
+            return False
+        return self.instances[req.instance].steal(req)
 
 
 def run_heuristic(cluster: Cluster, requests: Sequence[Request], policy,

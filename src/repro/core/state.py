@@ -23,6 +23,11 @@ instance block: with them an agent trained on a MIX of calibrated and
 synthetic profiles can condition placement on what the hardware *is*
 instead of inferring speed from load dynamics (off by default --
 existing checkpoints keep their state shape).
+
+``include_health`` appends the gateway HealthTracker's degradation
+score and the instance's slowdown ``1 - 1/speed_factor`` (both in
+[0, 1]) so an agent can learn to route around stragglers before the
+circuit breaker trips (off by default, same shape-compat reasoning).
 """
 from __future__ import annotations
 
@@ -51,22 +56,31 @@ HW_CAP_SCALE = 1e-5     # capacity 60k (A100)  -> 0.60
 # prospective hit fraction on this instance -- already in [0, 1]
 CACHE_DIMS = 1
 
+# per-instance health block (optional): the gateway HealthTracker's
+# degradation score (0 = at fleet median, 1 = breaker threshold) and the
+# instance's observable slowdown 1 - 1/speed_factor (0 = nominal) --
+# both already in [0, 1]
+HEALTH_DIMS = 2
+
 _E0, _E1 = BUCKET_EDGES
 
 
 def instance_dims(include_impact: bool = True,
                   include_hardware: bool = False,
-                  include_cache: bool = False) -> int:
+                  include_cache: bool = False,
+                  include_health: bool = False) -> int:
     return (INSTANCE_DIMS + (1 if include_impact else 0)
             + (HW_DIMS if include_hardware else 0)
-            + (CACHE_DIMS if include_cache else 0))
+            + (CACHE_DIMS if include_cache else 0)
+            + (HEALTH_DIMS if include_health else 0))
 
 
 def state_dim(m: int, include_impact: bool = True,
               include_hardware: bool = False,
-              include_cache: bool = False) -> int:
+              include_cache: bool = False,
+              include_health: bool = False) -> int:
     return instance_dims(include_impact, include_hardware,
-                         include_cache) * m + ROUTER_DIMS
+                         include_cache, include_health) * m + ROUTER_DIMS
 
 
 def featurize(cluster: Cluster, profile: HardwareProfile,
@@ -75,20 +89,23 @@ def featurize(cluster: Cluster, profile: HardwareProfile,
               predict_decode: Optional[Callable] = None,
               alpha: float = 0.5,
               include_hardware: bool = False,
-              include_cache: bool = False) -> np.ndarray:
+              include_cache: bool = False,
+              include_health: bool = False) -> np.ndarray:
     if getattr(cluster, "is_vec", False):
         # vecsim backend: read the packed per-slot arrays directly
         # (bit-identical features, no Python object scans)
         return _featurize_vec(cluster, profile, predict_bucket,
                               n_buckets, include_impact,
                               predict_decode, alpha, include_hardware,
-                              include_cache)
+                              include_cache, include_health)
     # Featurization runs once per router decision; it is written as a
     # single pass of scalar Python per instance because numpy call
     # overhead dominates at these sizes (a handful of residents).
     head = cluster.central[0] if cluster.central else None
     dims = instance_dims(include_impact, include_hardware,
-                         include_cache)
+                         include_cache, include_health)
+    health_scores = (getattr(cluster, "health_scores", None)
+                     if include_health else None)
     feats = [0.0] * (dims * cluster.m + ROUTER_DIMS)
     if include_impact and head is not None:
         d_hat = (predict_decode(head) if predict_decode
@@ -161,6 +178,15 @@ def featurize(cluster: Cluster, profile: HardwareProfile,
                     + (HW_DIMS if include_hardware else 0)
                 feats[cb] = pc.hit_fraction(head.prompt_tokens,
                                             head.prefix_hashes)
+        if include_health:
+            hlb = base + INSTANCE_DIMS + (1 if include_impact else 0) \
+                + (HW_DIMS if include_hardware else 0) \
+                + (CACHE_DIMS if include_cache else 0)
+            if health_scores is not None and k < len(health_scores):
+                feats[hlb] = float(health_scores[k])
+            # slowdown 1 - 1/speed: same expression as the vec path
+            feats[hlb + 1] = 1.0 - 1.0 / getattr(inst, "speed_factor",
+                                                 1.0)
     feats[dims * cluster.m] = min(len(cluster.central), 512) / 512.0
     if head is not None:
         if head.predicted_bucket is not None:
@@ -181,7 +207,8 @@ def _featurize_vec(cluster, profile: HardwareProfile,
                    predict_bucket, n_buckets: int, include_impact: bool,
                    predict_decode, alpha: float,
                    include_hardware: bool = False,
-                   include_cache: bool = False) -> np.ndarray:
+                   include_cache: bool = False,
+                   include_health: bool = False) -> np.ndarray:
     """Featurize straight from a VecCluster's packed structure-of-arrays
     state -- the single-cluster view of :func:`featurize_vec_many`."""
     return featurize_vec_many(
@@ -189,14 +216,15 @@ def _featurize_vec(cluster, profile: HardwareProfile,
         include_impact=include_impact, alpha=alpha,
         predict_buckets=[predict_bucket],
         include_hardware=include_hardware,
-        include_cache=include_cache)[0]
+        include_cache=include_cache, include_health=include_health)[0]
 
 
 def featurize_vec_many(clusters, profiles, predict_decodes,
                        n_buckets: int = 8, include_impact: bool = True,
                        alpha: float = 0.5, predict_buckets=None,
                        include_hardware: bool = False,
-                       include_cache: bool = False):
+                       include_cache: bool = False,
+                       include_health: bool = False):
     """Featurize MANY VecClusters sharing one pool in a single
     vectorized pass over the concatenated lane set (the batched
     trainer's per-round state build: one set of matrix ops instead of
@@ -210,7 +238,7 @@ def featurize_vec_many(clusters, profiles, predict_decodes,
     hw = pool._hw
     heads = [c.central[0] if c.central else None for c in clusters]
     dims = instance_dims(include_impact, include_hardware,
-                         include_cache)
+                         include_cache, include_health)
     occ = pool.s_state[:, :hw][lanes_cat] != 0
     p = pool.s_prompt[:, :hw][lanes_cat]
     d = pool.s_decoded[:, :hw][lanes_cat]
@@ -278,6 +306,19 @@ def featurize_vec_many(clusters, profiles, predict_decodes,
                         block[pos_c + j, cb] = pc.hit_fraction(
                             head.prompt_tokens, hashes)
             pos_c += c.m
+    if include_health:
+        hlb = (INSTANCE_DIMS + (1 if include_impact else 0)
+               + (HW_DIMS if include_hardware else 0)
+               + (CACHE_DIMS if include_cache else 0))
+        pos_h = 0
+        for c in clusters:
+            hs = getattr(c, "health_scores", None)
+            if hs is not None:
+                k = min(c.m, len(hs))
+                block[pos_h:pos_h + k, hlb] = np.asarray(hs)[:k]
+            pos_h += c.m
+        # slowdown 1 - 1/speed: elementwise match of the scalar path
+        block[:, hlb + 1] = 1.0 - 1.0 / pool.speed[lanes_cat]
     block *= alive[:, None]
     out = []
     pos = 0
@@ -309,14 +350,15 @@ def featurize_vec_many(clusters, profiles, predict_decodes,
 def pad_state(s: np.ndarray, m: int, m_max: int,
               include_impact: bool = True,
               include_hardware: bool = False,
-              include_cache: bool = False) -> np.ndarray:
+              include_cache: bool = False,
+              include_health: bool = False) -> np.ndarray:
     """Pad an m-instance state vector to m_max instance slots (zeros --
     the same encoding as a failed instance) so episodes with different
     cluster shapes share one replay buffer / Q network."""
     if m == m_max:
         return s
     dims = instance_dims(include_impact, include_hardware,
-                         include_cache)
+                         include_cache, include_health)
     out = np.zeros(dims * m_max + ROUTER_DIMS, np.float32)
     out[:dims * m] = s[:dims * m]
     out[dims * m_max:] = s[dims * m:]
@@ -324,20 +366,34 @@ def pad_state(s: np.ndarray, m: int, m_max: int,
 
 
 def action_mask(cluster: Cluster) -> np.ndarray:
-    """[m+1] bool: failed instances masked out; defer always allowed."""
+    """[m+1] bool: failed instances masked out; defer always allowed.
+
+    When a gateway stamps a circuit-breaker ``health_mask`` on the
+    cluster (serving.chaos.HealthTracker), breakered instances are
+    masked out too -- the tracker's guarded fallback ensures the mask
+    never excludes the entire alive fleet."""
     m = cluster.m
     mask = np.zeros(m + 1, bool)
     if getattr(cluster, "is_vec", False):
         if cluster.central:
             mask[:m] = ~cluster.pool.failed[cluster.lane_ids]
+            _apply_health_mask(cluster, mask, m)
         mask[m] = True
         return mask
     for i, inst in enumerate(cluster.instances):
         mask[i] = not inst.failed
+    _apply_health_mask(cluster, mask, m)
     mask[m] = True
     if not cluster.central:          # nothing to route: only defer is valid
         mask[:m] = False
     return mask
+
+
+def _apply_health_mask(cluster, mask: np.ndarray, m: int):
+    hm = getattr(cluster, "health_mask", None)
+    if hm is not None:
+        k = min(m, len(hm))
+        mask[:k] &= np.asarray(hm[:k], bool)
 
 
 def pad_mask(mask: np.ndarray, m: int, m_max: int) -> np.ndarray:

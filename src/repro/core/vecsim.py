@@ -134,6 +134,7 @@ class VecSimPool:
         self.tdec = z(0)
         self.tpre = z(0)            # profile.t_prefill_base
         self.eps_lat = z(0)         # profile.epsilon (Eq. 1 tolerance)
+        self.speed = z(0)           # straggler factor (1.0 = nominal)
         self.chunk = z(0, np.int64)
         self.sched = z(0, np.int8)
         self.admit_ctr = z(0, np.int64)
@@ -198,8 +199,9 @@ class VecSimPool:
     # -- growth ----------------------------------------------------------
     _LANE_1D = ("lane_ep", "lane_local", "failed", "clock", "rts", "qps",
                 "outst", "cap", "nslots", "grad1", "grad2", "tdec",
-                "tpre", "eps_lat", "chunk", "sched", "admit_ctr",
-                "res_cnt", "pref_cnt", "qhead", "qcnt", "lane_ivv")
+                "tpre", "eps_lat", "speed", "chunk", "sched",
+                "admit_ctr", "res_cnt", "pref_cnt", "qhead", "qcnt",
+                "lane_ivv")
     _SLOT_2D = ("res_gid", "s_state", "s_prompt", "s_dtotal",
                 "s_prefilled", "s_decoded", "s_admit", "s_first",
                 "s_pfdone", "s_invd", "s_invt", "s_capat")
@@ -353,6 +355,7 @@ class VecSimPool:
         self.tdec[lane] = prof.t_decode_base
         self.tpre[lane] = prof.t_prefill_base
         self.eps_lat[lane] = prof.epsilon
+        self.speed[lane] = 1.0
         self.chunk[lane] = chunked_prefill
         self.sched[lane] = _SCHED_CODE[scheduler]
         if self.sched[lane] != SCHED_FCFS:
@@ -768,10 +771,12 @@ class VecSimPool:
         # -- iteration time + spikes (Fig. 1a); the prefill-base term
         # mirrors HardwareProfile.iteration_time's association order
         # (x + 0.0 == x, so zero-tpre profiles stay bit-identical) ------
+        # the straggler factor multiplies the finished sum exactly like
+        # SimInstance (x * 1.0 == x, so nominal lanes stay bit-identical)
         it_time = (self.tdec + self.grad1 * prefill_tokens
                    + self.grad2 * rts
-                   + self.tpre * (prefill_tokens > 0))
-        sp = active & (it_time > 2.0 * self.tdec)
+                   + self.tpre * (prefill_tokens > 0)) * self.speed
+        sp = active & (it_time > 2.0 * self.tdec * self.speed)
         if sp.any():
             for i in np.flatnonzero(sp):
                 self.spikes[int(i)].append(float(it_time[i]))
@@ -1113,6 +1118,11 @@ class VecSimPool:
             self._reset_progress(gid)
             self.phase[gid] = PH_QUEUED
             self.lane[gid] = -1
+            # the attempt died: clear timing stamps (SimInstance.fail
+            # parity) so TTFT/TBT/E2E measure the serving attempt
+            self.first_tok[gid] = np.nan
+            self.nemit[gid] = 0
+            self.prefill_done[gid] = np.nan
             r = self.objs[gid]
             r.prefilled = 0
             r.decoded = 0
@@ -1120,9 +1130,71 @@ class VecSimPool:
             r.preemptions = int(self.preempts[gid])
             r.phase = Phase.QUEUED
             r.instance = None
+            r.first_token = None
+            r.token_times = []
+            r.prefill_done = None
         if self._trbuf:
             self.drain_trace()   # called between advances
         return orphans
+
+    def recover_lane(self, lane: int, t: Optional[float] = None):
+        """Undo fail_lane: the lane comes back *empty* at its clock
+        (SimInstance.recover parity).  ``t`` lower-bounds the clock for
+        callers recovering between advances (the round loop has already
+        fast-forwarded failed lanes, so this is usually a no-op)."""
+        if t is not None:
+            self.clock[lane] = max(float(self.clock[lane]), float(t))
+        self.failed[lane] = False
+        if self.trace.enabled:
+            self._trbuf.append(("recover", float(self.clock[lane]),
+                                lane))
+            self.drain_trace()
+
+    def steal_request(self, gid: int) -> bool:
+        """Withdraw a routed request for hedged re-dispatch
+        (SimInstance.steal parity): remove it from its lane's queue or
+        resident slots with the same sum fixups, reset progress and
+        timing stamps.  Returns False if the request is no longer on an
+        instance (completed this tick)."""
+        lane = int(self.lane[gid])
+        if lane < 0:
+            return False
+        if self.phase[gid] in (PH_PREFILL, PH_DECODE):
+            cols = np.flatnonzero(self.res_gid[lane] == gid)
+            if not cols.size:
+                return False
+            self._evict_slot(lane, int(cols[0]))
+            self.rts[lane] -= self.prefilled[gid] + self.decoded[gid]
+            self.outst[lane] -= (
+                (self.prompt[gid] - self.prefilled[gid])
+                + (self.dtotal[gid] - self.decoded[gid]))
+        elif self.phase[gid] == PH_IQUEUE:
+            ks = np.flatnonzero(self.queue_gids(lane) == gid)
+            if not ks.size:
+                return False
+            self._qpop_at(lane, int(ks[0]))
+            self.qps[lane] -= self.prompt[gid]
+            self.outst[lane] -= self.prompt[gid] + self.dtotal[gid]
+        else:
+            return False
+        self._reset_progress(gid)
+        self.phase[gid] = PH_QUEUED
+        self.lane[gid] = -1
+        self.first_tok[gid] = np.nan
+        self.nemit[gid] = 0
+        self.prefill_done[gid] = np.nan
+        r = self.objs[gid]
+        if r is not None:
+            r.prefilled = 0
+            r.decoded = 0
+            r.cached_prefix = 0
+            r.preemptions = int(self.preempts[gid])
+            r.phase = Phase.QUEUED
+            r.instance = None
+            r.first_token = None
+            r.token_times = []
+            r.prefill_done = None
+        return True
 
     # -- trace drain -----------------------------------------------------
     def drain_trace(self):
@@ -1141,6 +1213,10 @@ class VecSimPool:
             kind = rec[0]
             if kind == "fail":
                 tr.emit(rec[1], _trace.EV_FAIL, -1, int(loc[rec[2]]))
+                continue
+            if kind == "recover":
+                tr.emit(rec[1], _trace.EV_RECOVER, -1,
+                        int(loc[rec[2]]))
                 continue
             if kind == "pre":
                 _, t, lane, gid, lost = rec
@@ -1354,6 +1430,17 @@ class VecInstanceView:
             "clock": self.clock,
         }
 
+    @property
+    def speed_factor(self) -> float:
+        return float(self.pool.speed[self.lane])
+
+    @speed_factor.setter
+    def speed_factor(self, f: float):
+        self.pool.speed[self.lane] = f
+
+    def recover(self):
+        self.pool.recover_lane(self.lane)
+
     def restore(self):
         self.pool.failed[self.lane] = False
 
@@ -1474,9 +1561,27 @@ class VecCluster:
         self.profiles = self.profiles + (profile or self.profile,)
         return idx
 
-    def fail_instance(self, idx: int):
-        for gid in self.pool.fail_lane(int(self.lane_ids[idx])):
-            self.central.appendleft(self.pool.objs[gid])
+    def fail_instance(self, idx: int, requeue: bool = True
+                      ) -> List[Request]:
+        orphans = [self.pool.objs[gid]
+                   for gid in self.pool.fail_lane(
+                       int(self.lane_ids[idx]))]
+        if requeue:
+            for r in orphans:
+                self.central.appendleft(r)
+        return orphans
+
+    def recover_instance(self, idx: int):
+        self.pool.recover_lane(int(self.lane_ids[idx]), self.t)
+
+    def set_speed_factor(self, idx: int, factor: float):
+        self.pool.speed[int(self.lane_ids[idx])] = float(factor)
+
+    def steal(self, req: Request) -> bool:
+        gid = self._gid.get(req.rid)
+        if gid is None:
+            return False
+        return self.pool.steal_request(gid)
 
     def set_trace(self, trace):
         """Attach a TraceRecorder after construction (Cluster parity)."""

@@ -15,6 +15,12 @@ instances or the calibrated simulator.
   PYTHONPATH=src python -m repro.launch.serve --mode gateway \
       --backend engine --policy mixing --requests 12
 
+  # chaos drill: seeded crash/straggler schedule with gateway failover
+  # (bounded-retry re-admission, circuit breaker, hedged re-dispatch)
+  PYTHONPATH=src python -m repro.launch.serve --mode gateway \
+      --chaos-seed 7 --chaos-crashes 1 --chaos-stragglers 1 \
+      --failover --hedge-after 4.0
+
   # calibrate a HardwareProfile from the real engine (core.calibrate):
   # sweep + fit, print diagnostics, write a committable JSON artifact.
   # --min-r2 makes a loose fit a non-zero exit (CI calibration-smoke).
@@ -155,9 +161,23 @@ def _tiny_engines(args, capacity: int = 400):
             for i in range(args.instances)]
 
 
+def _chaos_schedule(args):
+    """--chaos-seed: build the seeded FaultSchedule for this run."""
+    if args.chaos_seed is None:
+        return None
+    from repro.serving.chaos import FaultSchedule
+    horizon = args.requests / max(args.rate, 1e-9)
+    return FaultSchedule.random(
+        seed=args.chaos_seed, m=args.instances, horizon=horizon,
+        n_crashes=args.chaos_crashes,
+        n_stragglers=args.chaos_stragglers,
+        n_bursts=args.chaos_bursts)
+
+
 def serve_gateway(args):
     """Online gateway over the simulator (default) or real engines."""
     cfg = _router_cfg(args)
+    chaos = _chaos_schedule(args)
     gcfg = GatewayConfig(queue_cap=args.queue_cap, on_full=args.on_full,
                          scheduler=args.scheduler,
                          chunked_prefill=args.chunked_prefill,
@@ -165,7 +185,10 @@ def serve_gateway(args):
                          default_deadline_s=args.deadline,
                          prefix_cache_tokens=args.prefix_cache,
                          prefix_block=args.prefix_block,
-                         attribution=bool(args.metrics_out))
+                         attribution=bool(args.metrics_out),
+                         chaos=chaos, failover=args.failover,
+                         max_retries=args.max_retries,
+                         hedge_after_s=args.hedge_after)
     recorder = None
     if args.trace:
         from repro.serving import trace as trace_lib
@@ -219,10 +242,22 @@ def serve_gateway(args):
             policy = make_gateway_policy(args.policy, cfg)
         gw = Gateway(gcfg, profiles, policy, length=length,
                      trace=recorder)
-        stats = gw.run(scn)
+        if chaos is not None and chaos.bursts:
+            from repro.serving.chaos import inject_bursts
+            reqs = inject_bursts(scn.requests, chaos,
+                                 seed=args.chaos_seed)
+            samples = list(scn.samples) + [None] * (
+                len(reqs) - len(scn.requests))
+            stats = gw.run(reqs, samples=samples)
+        else:
+            stats = gw.run(scn)
     print(f"policy={stats['policy']} served n={stats['n']} "
           f"admitted={stats['admitted']} shed={stats['shed']} "
           f"preemptions={stats['preemptions']}")
+    if chaos is not None or args.failover:
+        print(f"chaos: orphaned={stats['orphaned']} "
+              f"retried={stats['retried']} hedged={stats['hedged']} "
+              f"breaker_trips={stats.get('breaker_trips', 0)}")
     print(format_snapshot(stats["snapshot"]))
     if args.trace or args.metrics_out:
         from repro.serving import obs
@@ -300,6 +335,27 @@ def main():
                     "queries")
     ap.add_argument("--checkpoint", default=None,
                     help="router checkpoint dir for --policy rl")
+    ap.add_argument("--chaos-seed", type=int, default=None,
+                    help="gateway: inject a seeded FaultSchedule "
+                    "(serving.chaos) of crashes / stragglers / tenant "
+                    "bursts into the run")
+    ap.add_argument("--chaos-crashes", type=int, default=1,
+                    help="crash+restart events in the schedule")
+    ap.add_argument("--chaos-stragglers", type=int, default=1,
+                    help="straggler slowdown windows in the schedule")
+    ap.add_argument("--chaos-bursts", type=int, default=0,
+                    help="correlated tenant-burst windows")
+    ap.add_argument("--failover", action="store_true",
+                    help="gateway failover: crash orphans re-enter "
+                    "admission with bounded retries + backoff; health "
+                    "tracker / circuit breaker filters candidates")
+    ap.add_argument("--max-retries", type=int, default=3,
+                    help="failover retry budget per request")
+    ap.add_argument("--hedge-after", type=float, default=None,
+                    metavar="SECONDS",
+                    help="hedged re-dispatch: withdraw a routed "
+                    "request still tokenless after this long and "
+                    "re-route it (None = off)")
     ap.add_argument("--trace", default=None, metavar="PATH",
                     help="gateway: record request lifecycle spans and "
                     "write a Chrome trace-event JSON (load in Perfetto "

@@ -77,6 +77,9 @@ class LLMInstance:
         self.clock = 0.0
         self.completed: List[Request] = []
         self.failed = False
+        # straggler model: scales every virtual-clock iteration time
+        # (1.0 = nominal), same semantics as SimInstance.speed_factor
+        self.speed_factor = 1.0
         # prefix/KV cache model (core.prefix_cache): the real prefill
         # still runs in full (model correctness -- the reduced configs
         # here don't share KV across slots), but the VIRTUAL clock
@@ -85,10 +88,11 @@ class LLMInstance:
         self.prefix_cache = (PrefixCache(prefix_cache_tokens,
                                          prefix_block)
                              if prefix_cache_tokens > 0 else None)
-        # lifecycle tracing (serving.trace).  The engine stamps
-        # TTFT/prefill_done one iteration earlier than the simulator
-        # (documented fidelity divergence); its trace events share that
-        # anchor.  ``trace_instance`` is the id used in events --
+        # lifecycle tracing (serving.trace).  The virtual clock is
+        # advanced BEFORE the decode pass (see step()), so first-token
+        # and completion stamps land at the iteration's END -- the same
+        # anchor as the simulator, letting fidelity deltas compare
+        # like-for-like.  ``trace_instance`` is the id used in events --
         # EngineClusterAdapter.set_trace rewrites it to the adapter
         # index so lanes line up with the gateway's routing ids.
         self.trace = _trace.NULL
@@ -160,10 +164,15 @@ class LLMInstance:
                     self.trace.emit(self.clock, _trace.EV_PREFILL_DONE,
                                     req.rid, self.trace_instance,
                                     req.tenant)
-        completions = self._decode_iteration()
+        # charge the iteration BEFORE running the decode pass: the
+        # resident-context term is the pre-decode sum and the tokens
+        # produced this iteration are stamped at its END, exactly like
+        # SimInstance._iteration (TTFT/E2E anchors compare
+        # like-for-like in the fidelity harness)
         resident_other = max(self.resident_tokens() - prefill_tokens, 0)
-        self.clock += self.profile.iteration_time(prefill_tokens,
-                                                  resident_other)
+        self.clock += self.profile.iteration_time(
+            prefill_tokens, resident_other) * self.speed_factor
+        completions = self._decode_iteration()
         # capacity enforcement: evict newest-admitted if over budget
         while (self.resident_tokens() > self.profile.capacity_tokens
                and len(self.resident) > 1):
@@ -249,4 +258,36 @@ class LLMInstance:
             r.reset_progress()
             r.phase = Phase.QUEUED
             r.instance = None
+            # the attempt died: clear timing stamps so TTFT/TBT/E2E
+            # measure the attempt that actually serves the request
+            r.first_token = None
+            r.token_times = []
+            r.prefill_done = None
         return orphans
+
+    def recover(self):
+        """Undo :meth:`fail`: the instance comes back empty (cold KV)
+        at its current clock and resumes accepting work."""
+        self.failed = False
+        if self.trace.enabled:
+            self.trace.emit(self.clock, _trace.EV_RECOVER, -1,
+                            self.trace_instance)
+
+    def steal(self, req: Request) -> bool:
+        """Withdraw a routed request for hedged re-dispatch; returns
+        False if it is no longer here (completed this step)."""
+        if req in self.queue:
+            self.queue.remove(req)
+        else:
+            slot = next((i for i, r in enumerate(self.slots)
+                         if r is req), None)
+            if slot is None:
+                return False
+            self.slots[slot] = None
+        req.reset_progress()
+        req.phase = Phase.QUEUED
+        req.instance = None
+        req.first_token = None
+        req.token_times = []
+        req.prefill_done = None
+        return True

@@ -14,10 +14,13 @@ replays ONE gateway arrival stream through
 
 each behind an identically-configured ``Gateway`` under one
 ``RoutingPolicy``, and reports per-percentile TTFT / TBT / E2E deltas
-between every backend pair.  Residual deltas are the engine mechanics
-the simulator abstracts (slot insert timing, first-token anchoring at
-iteration start vs end); with a calibrated profile they stay inside a
-narrow band -- ``benchmarks/bench_fidelity.py`` gates that band in CI.
+between every backend pair.  The engine stamps first-token and
+completion at the iteration's END -- its virtual clock advances before
+the decode pass, the same anchor as ``SimInstance._iteration`` -- so on
+a shared profile the virtual-clock deltas are zero and any residual is
+a real modelling gap, not an anchoring artifact.  With a calibrated
+profile the deltas stay inside a narrow band --
+``benchmarks/bench_fidelity.py`` gates that band in CI.
 
 The stream is engine-sized (prompts from a small set of lengths so the
 engine pays a bounded number of prefill retraces; decode lengths within

@@ -35,6 +35,7 @@ real ``serving.engine.LLMInstance`` replicas (``EngineClusterAdapter``).
 """
 from __future__ import annotations
 
+import heapq
 from collections import OrderedDict, deque
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
@@ -46,6 +47,8 @@ from repro.core import rl_router as rl
 from repro.core import workload as wl
 from repro.core.simulator import Cluster
 from repro.serving import trace as tr_lib
+from repro.serving.chaos import ChaosInjector, FaultSchedule, \
+    HealthTracker
 from repro.serving.metrics import SLO, StreamMetrics
 from repro.serving.request import Phase, Request, summarize
 
@@ -193,6 +196,10 @@ class _EngineInstanceView:
     def prefix_cache(self):
         return getattr(self.engine, "prefix_cache", None)
 
+    @property
+    def speed_factor(self) -> float:
+        return self.engine.speed_factor
+
 
 class EngineClusterAdapter:
     """Drive real JAX ``LLMInstance`` replicas behind the gateway with
@@ -251,6 +258,28 @@ class EngineClusterAdapter:
         self.queue_len_trace.append(len(self.central))
         return done
 
+    # -- fault injection (Cluster parity) ------------------------------
+    def fail_instance(self, idx: int, requeue: bool = True
+                      ) -> List[Request]:
+        orphans = self.engines[idx].fail()
+        if requeue:
+            for r in orphans:
+                self.central.appendleft(r)
+        return orphans
+
+    def recover_instance(self, idx: int):
+        e = self.engines[idx]
+        e.clock = max(e.clock, self.t)
+        e.recover()
+
+    def set_speed_factor(self, idx: int, factor: float):
+        self.engines[idx].speed_factor = float(factor)
+
+    def steal(self, req: Request) -> bool:
+        if req.instance is None:
+            return False
+        return self.engines[req.instance].steal(req)
+
 
 # -- the gateway ------------------------------------------------------------
 
@@ -303,6 +332,26 @@ class GatewayConfig:
     # counter-track cadence (simulated seconds) for queue depth / KV
     # occupancy / backlog samples while tracing
     trace_counter_every: float = 1.0
+    # -- chaos / failover (serving.chaos) ------------------------------
+    # fault schedule replayed against the cluster at tick boundaries
+    chaos: Optional[FaultSchedule] = None
+    # failover: crash orphans re-enter admission with a bounded retry
+    # budget and exponential backoff instead of instantly requeueing;
+    # after ``max_retries`` failed attempts the request is shed
+    failover: bool = False
+    max_retries: int = 3
+    retry_backoff_s: float = 0.25
+    # hedged re-dispatch: a routed request still tokenless after
+    # ``hedge_after_s`` is withdrawn from its (straggling) instance and
+    # re-routed, at most ``max_hedges`` times.  None = off.
+    hedge_after_s: Optional[float] = None
+    max_hedges: int = 1
+    # health tracker / circuit breaker knobs (HealthTracker); the
+    # tracker runs whenever failover or chaos is on
+    health_alpha: float = 0.3
+    breaker_factor: float = 2.5
+    breaker_min_samples: int = 8
+    breaker_cooldown_s: float = 30.0
 
 
 class Gateway:
@@ -357,6 +406,22 @@ class Gateway:
         # weighted-fair share bookkeeping; maintained even without
         # tenant_weights -- it is two dict ops per request)
         self._q_tenant: Dict[str, int] = {}
+        # -- chaos / failover ------------------------------------------
+        self.chaos = (ChaosInjector(cfg.chaos)
+                      if cfg.chaos is not None else None)
+        self.health = (HealthTracker(
+            self.cluster.m, alpha=cfg.health_alpha,
+            breaker_factor=cfg.breaker_factor,
+            min_samples=cfg.breaker_min_samples,
+            cooldown_s=cfg.breaker_cooldown_s)
+            if (cfg.failover or self.chaos is not None) else None)
+        self._retry_q: List[Tuple[float, int, Request]] = []  # heap
+        self._retry_seq = 0
+        # routed-but-tokenless requests eligible for hedging:
+        # rid -> (req, gateway dispatch time)
+        self._inflight: Dict[int, Tuple[Request, float]] = {}
+        self.orphaned = 0
+        self.hedged = 0
 
     # -- admission / backpressure --------------------------------------
     def _queue_full(self) -> bool:
@@ -533,6 +598,128 @@ class Gateway:
         self._last_scale = now
         self.scale_events.append(now)
 
+    # -- chaos / failover ----------------------------------------------
+    def _apply_chaos(self):
+        """Apply the fault schedule's due events at the tick boundary.
+        With failover on, crash orphans go through the bounded-retry
+        path; otherwise they requeue immediately (legacy semantics) but
+        with the gateway's tenant-occupancy bookkeeping kept
+        consistent."""
+        if self.chaos is None:
+            return
+        on_orphans = (self._on_orphans if self.cfg.failover
+                      else self._requeue_orphans)
+        for kind, idx, _ in self.chaos.step(self.cluster,
+                                            self.cluster.t, on_orphans):
+            if kind == "recover" and self.health is not None:
+                self.health.reset(idx)
+
+    def _requeue_orphans(self, orphans: List[Request]):
+        for req in orphans:
+            self._inflight.pop(req.rid, None)
+            self.orphaned += 1
+            self.metrics.on_orphan(req.tenant)
+            self.cluster.central.appendleft(req)
+            self._q_tenant[req.tenant] = \
+                self._q_tenant.get(req.tenant, 0) + 1
+
+    def _on_orphans(self, orphans: List[Request]):
+        """Failover: orphaned requests re-enter admission with a
+        bounded retry budget and exponential backoff; past the budget
+        they are shed (the outage consumed them)."""
+        now = self.cluster.t
+        cfg = self.cfg
+        for req in orphans:
+            self._inflight.pop(req.rid, None)
+            self.orphaned += 1
+            self.metrics.on_orphan(req.tenant)
+            req.retries += 1
+            if req.retries > cfg.max_retries:
+                req.phase = Phase.SHED
+                self.shed.append(req)
+                self._n_admitted -= 1
+                self.metrics.on_evict(req.tenant)   # admitted -> shed
+                if self.trace.enabled:
+                    self.trace.emit(now, tr_lib.EV_SHED, req.rid, -1,
+                                    req.tenant,
+                                    {"retries": int(req.retries - 1)})
+                continue
+            due = now + cfg.retry_backoff_s * (2.0 ** (req.retries - 1))
+            heapq.heappush(self._retry_q,
+                           (due, self._retry_seq, req))
+            self._retry_seq += 1
+            self.metrics.on_retry(req.tenant)
+            if self.trace.enabled:
+                self.trace.emit(now, tr_lib.EV_RETRY, req.rid, -1,
+                                req.tenant,
+                                {"retries": int(req.retries),
+                                 "due": float(due)})
+
+    def _drain_retries(self):
+        """Re-admit retries whose backoff has elapsed.  They re-enter
+        at the FRONT of the central queue: they are the stream's oldest
+        requests and have already paid their backoff delay."""
+        now = self.cluster.t
+        while self._retry_q and self._retry_q[0][0] <= now:
+            _, _, req = heapq.heappop(self._retry_q)
+            req.phase = Phase.QUEUED
+            self.cluster.central.appendleft(req)
+            self._q_tenant[req.tenant] = \
+                self._q_tenant.get(req.tenant, 0) + 1
+
+    def _update_health(self):
+        """Stamp the tracker's verdict onto the cluster: policies and
+        the featurizer consult ``health_mask`` / ``health_scores``
+        through duck-typed getattr, so every backend -- py, vec, engine
+        adapter -- gets the same candidate-set filtering."""
+        if self.health is None:
+            return
+        cluster = self.cluster
+        self.health.ensure(cluster.m)
+        mask, scores = self.health.assess(cluster.t, cluster.alive())
+        cluster.health_mask = mask
+        cluster.health_scores = scores
+
+    def _hedge_stuck(self):
+        """Hedged re-dispatch: a routed request still tokenless past
+        ``hedge_after_s`` is withdrawn from its (straggling) instance
+        and re-enters the central queue for a fresh placement."""
+        cfg = self.cfg
+        if cfg.hedge_after_s is None or not self._inflight:
+            return
+        cluster = self.cluster
+        now = cluster.t
+        is_vec = getattr(cluster, "is_vec", False)
+        for rid, (req, t0) in list(self._inflight.items()):
+            if now - t0 <= cfg.hedge_after_s \
+                    or req.hedges >= cfg.max_hedges:
+                continue
+            if is_vec:
+                cluster.pool.sync_request(cluster.gid_of(req))
+            if req.first_token is not None or req.phase is Phase.DONE:
+                del self._inflight[rid]     # progressing; leave it be
+                continue
+            src = req.instance
+            if not cluster.steal(req):
+                del self._inflight[rid]
+                continue
+            del self._inflight[rid]
+            req.hedges += 1
+            self.hedged += 1
+            if self.health is not None and src is not None:
+                self.health.on_bad(int(src))
+            self.metrics.on_hedge(req.tenant)
+            if self.trace.enabled:
+                self.trace.emit(now, tr_lib.EV_HEDGE, req.rid,
+                                -1 if src is None else int(src),
+                                req.tenant,
+                                {"inst": -1 if src is None
+                                 else int(src)})
+            req.phase = Phase.QUEUED
+            cluster.central.appendleft(req)
+            self._q_tenant[req.tenant] = \
+                self._q_tenant.get(req.tenant, 0) + 1
+
     # -- routing -------------------------------------------------------
     def _route_some(self):
         cfg = self.cfg
@@ -586,6 +773,8 @@ class Gateway:
                     tr.emit(cluster.t, tr_lib.EV_ROUTE, head.rid,
                             int(a), head.tenant, data)
             cluster.route(a)
+            if cfg.hedge_after_s is not None:
+                self._inflight[head.rid] = (head, cluster.t)
 
     def _sample_counters(self):
         """Counter-track samples for the Perfetto export: router queue
@@ -618,7 +807,10 @@ class Gateway:
         cfg = self.cfg
         tr = self.trace
         i, n = 0, len(stream)
+        track_health = self.health is not None
         while True:
+            self._apply_chaos()
+            self._update_health()
             new: List[Tuple[Request, object]] = []
             while i < n and stream[i][0].arrival <= cluster.t:
                 new.append(stream[i])
@@ -626,14 +818,20 @@ class Gateway:
             if new:
                 self.length.prefetch(new)
             self._drain_overflow()      # deferred clients retry first
+            self._drain_retries()       # elapsed-backoff crash orphans
             for req, _ in new:
                 if tr.enabled:
                     tr.emit(req.arrival, tr_lib.EV_ARRIVE, req.rid,
                             -1, req.tenant,
                             {"prompt": int(req.prompt_tokens)})
                 self._admit(req)
+            self._hedge_stuck()
             self._route_some()
             for r in cluster.advance():
+                if self._inflight:
+                    self._inflight.pop(r.rid, None)
+                if track_health and r.instance is not None:
+                    self.health.on_complete(int(r.instance), r)
                 self.metrics.on_complete(r, r.tenant)
             self._drain_overflow()
             self._maybe_scale_up()
@@ -641,7 +839,7 @@ class Gateway:
                                >= cfg.trace_counter_every):
                 self._last_counter = cluster.t
                 self._sample_counters()
-            if (i >= n and not self._overflow
+            if (i >= n and not self._overflow and not self._retry_q
                     and len(cluster.completed) >= self._n_admitted):
                 break
             if cluster.t > cfg.max_time:
@@ -656,6 +854,11 @@ class Gateway:
         stats["cancelled"] = len(self.cancelled)
         stats["admitted"] = self._n_admitted
         stats["scaled"] = len(self.scale_events)
+        stats["orphaned"] = self.orphaned
+        stats["hedged"] = self.hedged
+        stats["retried"] = sum(r.retries for r in requests)
+        if self.health is not None:
+            stats["breaker_trips"] = self.health.trips
         stats["policy"] = getattr(self.policy, "name", "?")
         stats["snapshot"] = self.metrics.snapshot(cluster.t)
         return stats

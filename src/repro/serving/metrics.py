@@ -218,6 +218,9 @@ class _TenantStats:
         self.cancelled = 0
         self.admitted = 0
         self.slo_attained = 0
+        self.orphaned = 0        # routed to an instance that crashed
+        self.retried = 0         # bounded-backoff re-admissions
+        self.hedged = 0          # hedged re-dispatches (stragglers)
 
 
 class _Attribution:
@@ -349,6 +352,21 @@ class StreamMetrics:
             if shed:
                 st.shed += 1
 
+    def on_orphan(self, tenant: str = "default"):
+        """A routed request's instance crashed under it."""
+        self._all.orphaned += 1
+        self._tenant(tenant).orphaned += 1
+
+    def on_retry(self, tenant: str = "default"):
+        """A crash orphan was scheduled for backoff re-admission."""
+        self._all.retried += 1
+        self._tenant(tenant).retried += 1
+
+    def on_hedge(self, tenant: str = "default"):
+        """A stuck request was withdrawn for hedged re-dispatch."""
+        self._all.hedged += 1
+        self._tenant(tenant).hedged += 1
+
     def on_complete(self, req: Request, tenant: str = "default"):
         now = req.finished if req.finished is not None else 0.0
         if self._attr is not None:
@@ -371,6 +389,9 @@ class StreamMetrics:
             "shed_rate": st.shed / offered if offered else 0.0,
             "cancelled": st.cancelled,
             "completed": st.completed,
+            "orphaned": st.orphaned,
+            "retried": st.retried,
+            "hedged": st.hedged,
             "slo_attained": st.slo_attained,
             "slo_rate": (st.slo_attained / st.completed
                          if st.completed else None),

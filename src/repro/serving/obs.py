@@ -35,9 +35,11 @@ _US = 1e6          # trace timestamps are seconds; Chrome wants microseconds
 # router-side instants (pid 0); everything else rides an instance pid
 _ROUTER_INSTANTS = {tr.EV_ADMIT: "admit", tr.EV_DEFER: "defer",
                     tr.EV_SHED: "shed", tr.EV_CANCEL: "cancel",
-                    tr.EV_EVICT: "evict", tr.EV_ROUTE: "route"}
+                    tr.EV_EVICT: "evict", tr.EV_ROUTE: "route",
+                    tr.EV_RETRY: "retry"}
 _INSTANCE_INSTANTS = {tr.EV_FIRST_TOKEN: "first_token",
-                      tr.EV_PREEMPT: "preempt", tr.EV_FAIL: "fail"}
+                      tr.EV_PREEMPT: "preempt", tr.EV_FAIL: "fail",
+                      tr.EV_RECOVER: "recover", tr.EV_HEDGE: "hedge"}
 
 
 class _Lanes:
@@ -89,7 +91,9 @@ def _spans_for(events) -> List[dict]:
             close(t)
             open_span = {"name": "decode", "pid": 1 + inst, "t0": t,
                          "rid": rid, "tenant": tenant, "args": {}}
-        elif etype in (tr.EV_COMPLETE, tr.EV_PREEMPT):
+        elif etype in (tr.EV_COMPLETE, tr.EV_PREEMPT, tr.EV_HEDGE):
+            # a hedge withdraws the request from its instance, ending
+            # whatever span the doomed attempt had open
             close(t)
     if open_span is not None:          # request still in flight at end
         close(open_span["t0"])

@@ -25,6 +25,19 @@ from repro.core import state as state_lib
 from repro.core.prefix_cache import hit_fractions
 
 
+def healthy_candidates(cluster):
+    """Alive instances minus any the gateway's circuit breaker has
+    opened on (``cluster.health_mask``, stamped per tick by the
+    gateway's HealthTracker).  Falls back to the full alive set if the
+    mask would empty it -- a degraded instance beats no instance."""
+    alive = cluster.alive()
+    hm = getattr(cluster, "health_mask", None)
+    if hm is None:
+        return alive
+    ok = [i for i in alive if i >= len(hm) or hm[i]]
+    return ok or alive
+
+
 @runtime_checkable
 class RoutingPolicy(Protocol):
     """Structural protocol: ``route`` is required.  Policies MAY also
@@ -43,14 +56,15 @@ class RoutingPolicy(Protocol):
 
 
 class RoundRobinPolicy:
-    """Alternate over alive instances (the paper's primary baseline)."""
+    """Alternate over alive (and non-breakered) instances (the paper's
+    primary baseline)."""
     name = "rr"
 
     def __init__(self):
         self._next = 0
 
     def route(self, cluster, req, d_hat: int) -> Optional[int]:
-        alive = cluster.alive()
+        alive = healthy_candidates(cluster)
         if not alive:
             return None
         idx = alive[self._next % len(alive)]
@@ -68,7 +82,7 @@ class LeastOutstandingWork:
         self._est: dict = {}           # rid -> d_hat at routing time
 
     def route(self, cluster, req, d_hat: int) -> Optional[int]:
-        alive = cluster.alive()
+        alive = healthy_candidates(cluster)
         if not alive:
             return None
         loads = self._loads(cluster, alive)
@@ -93,7 +107,7 @@ class LeastOutstandingWork:
     def explain(self, cluster, req, d_hat: int) -> dict:
         """Estimated outstanding-token load per alive instance (the
         argmin is the pick)."""
-        alive = cluster.alive()
+        alive = healthy_candidates(cluster)
         return {"loads": [float(x)
                           for x in self._loads(cluster, alive)],
                 "alive": list(alive)}
@@ -108,7 +122,7 @@ class PrefixAffinityPolicy:
     name = "sticky"
 
     def route(self, cluster, req, d_hat: int) -> Optional[int]:
-        alive = cluster.alive()
+        alive = healthy_candidates(cluster)
         if not alive:
             return None
         fracs = hit_fractions(cluster, req)
@@ -198,7 +212,8 @@ class RLPolicy:
                 include_impact=cfg.include_impact_features,
                 predict_decode=lambda r: d_hat, alpha=cfg.alpha,
                 include_hardware=cfg.include_hardware_features,
-                include_cache=cfg.include_cache_features)
+                include_cache=cfg.include_cache_features,
+                include_health=cfg.include_health_features)
             prior = w_sel * bonus if w_sel else None
             return int(self.agent.act(
                 s, mask, epsilon=0.0, prior=prior,
@@ -233,7 +248,8 @@ class RLPolicy:
             include_impact=cfg.include_impact_features,
             predict_decode=lambda r: d_hat, alpha=cfg.alpha,
             include_hardware=cfg.include_hardware_features,
-            include_cache=cfg.include_cache_features)
+            include_cache=cfg.include_cache_features,
+            include_health=cfg.include_health_features)
         q = np.asarray(dqn.q_values(self.agent.cfg, self.agent.params,
                                     np.asarray(s, np.float32)[None]))[0]
         out["q"] = [float(x) for x in q]

@@ -54,6 +54,8 @@ class Request:
     token_times: List[float] = field(default_factory=list)
     preemptions: int = 0
     cached_prefix: int = 0                   # prefill tokens served from cache
+    retries: int = 0                         # crash-orphan re-admissions
+    hedges: int = 0                          # hedged re-dispatches
 
     # -- metrics -----------------------------------------------------------
     @property

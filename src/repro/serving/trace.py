@@ -49,6 +49,9 @@ lives in docs/TRACING.md):
   preempt        sim / vecsim / engine    lost (progress tokens lost)
   complete       sim / vecsim / engine    --
   fail           sim / vecsim / engine    -- (rid = -1; instance event)
+  recover        sim / vecsim / engine    -- (rid = -1; instance event)
+  retry          gateway                  retries, due (backoff target)
+  hedge          gateway                  inst (instance stolen from)
   ============== ======================== ==========================
 
 Timestamps are simulated seconds on the emitting clock: gateway events
@@ -81,13 +84,17 @@ EV_FIRST_TOKEN = "first_token"
 EV_PREEMPT = "preempt"
 EV_COMPLETE = "complete"
 EV_FAIL = "fail"
+EV_RECOVER = "recover"
+EV_RETRY = "retry"
+EV_HEDGE = "hedge"
 
 #: canonical intra-timestamp rank (lifecycle order within one request)
 EVENT_ORDER: Dict[str, int] = {
     EV_ARRIVE: 0, EV_ADMIT: 1, EV_DEFER: 2, EV_SHED: 3, EV_EVICT: 4,
     EV_CANCEL: 5, EV_ROUTE: 6, EV_INST_ADMIT: 7, EV_PREFILL_CHUNK: 8,
     EV_PREFILL_DONE: 9, EV_FIRST_TOKEN: 10, EV_PREEMPT: 11,
-    EV_COMPLETE: 12, EV_FAIL: 13,
+    EV_COMPLETE: 12, EV_FAIL: 13, EV_RECOVER: 14, EV_RETRY: 15,
+    EV_HEDGE: 16,
 }
 
 EVENT_TYPES: Tuple[str, ...] = tuple(EVENT_ORDER)

@@ -1,0 +1,555 @@
+"""Chaos subsystem + gateway failover: seeded fault schedules, py-vs-vec
+bit parity under crashes/stragglers, recovery, bounded-retry failover,
+circuit breaker, hedged re-dispatch, and the engine TTFT anchor."""
+import numpy as np
+import pytest
+from _hypothesis_support import given, settings, st
+
+from repro.core import state as state_lib
+from repro.core.profiles import V100_LLAMA2_7B
+from repro.core.simulator import Cluster
+from repro.core.workload import generate, to_requests
+from repro.serving.chaos import (ChaosInjector, Crash, FaultSchedule,
+                                 HealthTracker, Straggler, TenantBurst,
+                                 inject_bursts)
+from repro.serving.gateway import Gateway, GatewayConfig
+from repro.serving.policies import (LeastOutstandingWork,
+                                    MixingImpactPolicy,
+                                    RoundRobinPolicy, healthy_candidates)
+from repro.serving.request import Phase, Request
+from repro.serving import trace as tr
+
+PROF = V100_LLAMA2_7B
+
+TERMINAL = (Phase.DONE, Phase.SHED, Phase.CANCELLED)
+
+
+def _reqs(n, seed=0, rate=20.0):
+    return to_requests(generate(n, seed=seed), rate=rate, seed=seed + 1)
+
+
+def _drive(cluster, reqs, schedule=None, t_max=3000.0):
+    """Round-robin-over-alive driving loop with per-tick chaos
+    injection (the simulator-level harness; the gateway has its own)."""
+    injector = ChaosInjector(schedule) if schedule is not None else None
+    pending = sorted(reqs, key=lambda r: r.arrival)
+    i, rr = 0, 0
+    while len(cluster.completed) < len(reqs) and cluster.t < t_max:
+        if injector is not None:
+            injector.step(cluster, cluster.t)
+        while i < len(pending) and pending[i].arrival <= cluster.t:
+            cluster.enqueue(pending[i])
+            i += 1
+        alive = cluster.alive()
+        while cluster.central and alive:
+            cluster.route(alive[rr % len(alive)])
+            rr += 1
+        cluster.advance()
+    return injector
+
+
+def _assert_parity(ra, rb):
+    for a, b in zip(ra, rb):
+        assert a.finished == b.finished, (a.rid, a.finished, b.finished)
+        assert a.first_token == b.first_token, a.rid
+        assert a.prefill_done == b.prefill_done
+        assert a.instance == b.instance
+        assert a.decoded == b.decoded and a.prefilled == b.prefilled
+        assert a.phase is b.phase
+        assert a.retries == b.retries and a.hedges == b.hedges
+
+
+# -- fault schedules ---------------------------------------------------------
+
+def test_fault_schedule_seed_deterministic():
+    a = FaultSchedule.random(seed=11, m=4, horizon=30.0, n_crashes=2,
+                             n_stragglers=2, n_bursts=1)
+    b = FaultSchedule.random(seed=11, m=4, horizon=30.0, n_crashes=2,
+                             n_stragglers=2, n_bursts=1)
+    c = FaultSchedule.random(seed=12, m=4, horizon=30.0, n_crashes=2,
+                             n_stragglers=2, n_bursts=1)
+    assert a == b
+    assert a != c
+    assert a.events() == b.events()
+    # faults land early enough to observe their fallout
+    assert all(ev[0] <= 30.0 for ev in a.events()
+               if ev[1] != "recover")
+
+
+def test_fault_schedule_event_order():
+    s = FaultSchedule(
+        crashes=(Crash(5.0, 1, restart_after=3.0),),
+        stragglers=(Straggler(5.0, 8.0, 0, factor=2.0),))
+    ev = s.events()
+    assert [e[1] for e in ev] == ["fail", "slow", "recover", "slow"]
+    assert ev[2] == (8.0, "recover", 1, 0.0)
+    assert ev[3] == (8.0, "slow", 0, 1.0)      # window closes to 1.0
+
+
+def test_inject_bursts_clones_tenant_shapes():
+    base = [Request(prompt_tokens=100, decode_tokens=20, arrival=0.5,
+                    tenant="a", rid=0),
+            Request(prompt_tokens=30, decode_tokens=7, arrival=1.0,
+                    tenant="b", rid=1)]
+    sched = FaultSchedule(bursts=(TenantBurst(0.0, 10.0, "b",
+                                              rate=2.0),))
+    out1 = inject_bursts(base, sched, seed=3)
+    out2 = inject_bursts(base, sched, seed=3)
+    extra = out1[2:]
+    assert len(out1) > 2
+    assert [r.arrival for r in out1] == [r.arrival for r in out2]
+    assert all(r.tenant == "b" for r in extra)
+    assert all(r.prompt_tokens == 30 and r.decode_tokens == 7
+               for r in extra)           # donor shapes, fresh rids
+    assert len({r.rid for r in out1}) == len(out1)
+    assert all(0.0 < r.arrival < 10.0 for r in extra)
+
+
+# -- straggler / recovery parity ---------------------------------------------
+
+def test_speed_factor_parity_py_vec():
+    sched = FaultSchedule(stragglers=(Straggler(1.0, 6.0, 0,
+                                                factor=3.5),))
+    ra, rb = _reqs(90, seed=5), _reqs(90, seed=5)
+    ca = Cluster(PROF, 3)
+    cb = Cluster(PROF, 3, backend="vec")
+    _drive(ca, ra, sched)
+    _drive(cb, rb, sched)
+    cb.sync_all()
+    _assert_parity(ra, rb)
+    assert all(r.phase is Phase.DONE for r in ra)
+
+
+def test_straggler_slows_instance():
+    def run(factor):
+        reqs = _reqs(60, seed=2)
+        sched = FaultSchedule(stragglers=(
+            Straggler(0.0, 1e9, 0, factor=factor),))
+        c = Cluster(PROF, 1)
+        _drive(c, reqs, sched)
+        return max(r.finished for r in reqs)
+    assert run(4.0) > 2.0 * run(1.0)
+
+
+def test_crash_restart_parity_py_vec():
+    sched = FaultSchedule(crashes=(Crash(2.0, 1, restart_after=4.0),),
+                          stragglers=(Straggler(3.0, 7.0, 0,
+                                                factor=2.0),))
+    ra, rb = _reqs(90, seed=7), _reqs(90, seed=7)
+    ca = Cluster(PROF, 3)
+    cb = Cluster(PROF, 3, backend="vec")
+    _drive(ca, ra, sched)
+    _drive(cb, rb, sched)
+    cb.sync_all()
+    _assert_parity(ra, rb)
+    assert all(r.phase is Phase.DONE for r in ra)
+
+
+def test_recover_surfaces_through_cluster_and_trace():
+    for backend in ("py", "vec"):
+        rec = tr.TraceRecorder()
+        cluster = Cluster(PROF, 2, backend=backend)
+        cluster.set_trace(rec)
+        reqs = _reqs(30, seed=4)
+        sched = FaultSchedule(crashes=(Crash(1.0, 0,
+                                             restart_after=2.0),))
+        inj = _drive(cluster, reqs, sched)
+        assert [(k, i) for _, k, i, _ in inj.log] == [("fail", 0),
+                                                      ("recover", 0)]
+        assert 0 in cluster.alive()
+        kinds = [e[1] for e in rec.events()]
+        assert tr.EV_FAIL in kinds and tr.EV_RECOVER in kinds
+        # the recovered instance serves fresh traffic again
+        extra = Request(prompt_tokens=16, decode_tokens=4,
+                        arrival=cluster.t, rid=99_000)
+        cluster.enqueue(extra)
+        cluster.route(0)
+        while extra.finished is None and cluster.t < 1000.0:
+            cluster.advance()
+        if backend == "vec":
+            cluster.sync_all()
+        assert extra.finished is not None and extra.instance == 0, backend
+
+
+def test_injector_skips_dead_and_out_of_range():
+    sched = FaultSchedule(crashes=(Crash(1.0, 0), Crash(2.0, 0),
+                                   Crash(2.0, 9)))
+    cluster = Cluster(PROF, 2)
+    inj = ChaosInjector(sched)
+    inj.step(cluster, 5.0)
+    assert [(k, i) for _, k, i, _ in inj.log] == [("fail", 0)]
+    assert inj.pending == 0
+
+
+# -- S1: crash requeue restarts the latency clock ----------------------------
+
+def test_fail_requeue_clears_timing_stamps():
+    """A crash orphan's TTFT must measure the attempt that actually
+    serves it -- the dead instance's stamps are cleared on requeue."""
+    for backend in ("py", "vec"):
+        cluster = Cluster(PROF, 2, backend=backend)
+        req = Request(prompt_tokens=50, decode_tokens=200, arrival=0.0)
+        cluster.enqueue(req)
+        cluster.route(0)
+        while cluster.t < 1.0:          # serve long enough to emit
+            cluster.advance()
+        if backend == "vec":
+            cluster.sync_all()
+        assert req.first_token is not None
+        t_fail = cluster.t
+        cluster.fail_instance(0)
+        if backend == "vec":
+            cluster.sync_all()
+        assert req.first_token is None, backend
+        assert req.prefill_done is None and req.token_times == []
+        cluster.route(1)
+        while req.finished is None and cluster.t < 100.0:
+            cluster.advance()
+            if backend == "vec":
+                cluster.sync_all()
+        assert req.finished is not None
+        # the pinned metric: TTFT anchored to the SECOND attempt
+        assert req.first_token > t_fail, backend
+        assert req.ttft == req.first_token - req.arrival
+
+
+# -- health tracking / circuit breaker ---------------------------------------
+
+def _fake_completion(tbt, decoded=11, t0=0.0):
+    r = Request(prompt_tokens=10, decode_tokens=decoded, arrival=t0)
+    r.decoded = decoded
+    r.first_token = t0 + 0.1
+    r.finished = r.first_token + tbt * (decoded - 1)
+    return r
+
+
+def test_health_tracker_trips_breaker_and_reprobes():
+    h = HealthTracker(3, min_samples=4, breaker_factor=2.0,
+                      cooldown_s=10.0)
+    for _ in range(6):
+        h.on_complete(0, _fake_completion(0.1))
+        h.on_complete(1, _fake_completion(0.1))
+        h.on_complete(2, _fake_completion(0.5))   # 5x the median
+    mask, scores = h.assess(t=1.0, alive=[0, 1, 2])
+    assert list(mask) == [True, True, False]
+    assert h.trips == 1
+    assert scores[2] >= 1.0 > scores[0]
+    # open for cooldown_s, then fresh samples decide again
+    mask, _ = h.assess(t=5.0, alive=[0, 1, 2])
+    assert not mask[2]
+    mask, _ = h.assess(t=12.0, alive=[0, 1, 2])
+    assert mask[2]                    # re-probed with forgotten history
+
+
+def test_health_tracker_guarded_fallback_keeps_fleet():
+    h = HealthTracker(2, min_samples=2, breaker_factor=1.5,
+                      bad_weight=10.0)
+    h.on_bad(0)
+    h.on_bad(1)
+    mask, _ = h.assess(t=0.0, alive=[0, 1])
+    # both would trip; the guard refuses to empty the candidate set
+    assert mask[0] and mask[1]
+
+
+def test_health_tracker_ignores_short_completions():
+    h = HealthTracker(1)
+    h.on_complete(0, _fake_completion(0.1, decoded=1))
+    assert h.n[0] == 0                # no TBT from a 1-token reply
+
+
+def test_healthy_candidates_filter_and_fallback():
+    cluster = Cluster(PROF, 3)
+    assert healthy_candidates(cluster) == [0, 1, 2]
+    cluster.health_mask = np.array([True, False, True])
+    assert healthy_candidates(cluster) == [0, 2]
+    rr = RoundRobinPolicy()
+    req = Request(prompt_tokens=10, decode_tokens=5)
+    picks = {rr.route(cluster, req, 5) for _ in range(6)}
+    assert picks == {0, 2}
+    jsq = LeastOutstandingWork()
+    assert jsq.route(cluster, req, 5) in (0, 2)
+    cluster.health_mask = np.array([False, False, False])
+    assert healthy_candidates(cluster) == [0, 1, 2]   # fallback
+
+
+def test_action_mask_respects_health_mask():
+    for backend in ("py", "vec"):
+        cluster = Cluster(PROF, 3, backend=backend)
+        cluster.enqueue(Request(prompt_tokens=10, decode_tokens=5))
+        cluster.health_mask = np.array([True, False, True])
+        mask = state_lib.action_mask(cluster)
+        assert list(mask) == [True, False, True, True], backend
+
+
+def test_mixing_scores_penalize_breakered_instance():
+    from repro.core import rl_router as rl
+    cluster = Cluster(PROF, 3)
+    req = Request(prompt_tokens=64, decode_tokens=32)
+    base = rl.mixing_scores(cluster, req, 32)
+    cluster.health_mask = np.array([True, False, True])
+    pen = rl.mixing_scores(cluster, req, 32)
+    assert pen[1] == base[1] - rl.HEALTH_PENALTY
+    assert pen[0] == base[0] and pen[2] == base[2]
+    assert np.isfinite(pen[1])        # penalized, not removed
+
+
+def test_health_features_bit_exact_py_vec():
+    sched = FaultSchedule(stragglers=(Straggler(0.0, 1e9, 1,
+                                                factor=2.5),))
+    ra, rb = _reqs(40, seed=6), _reqs(40, seed=6)
+    ca = Cluster(PROF, 3)
+    cb = Cluster(PROF, 3, backend="vec")
+    _drive(ca, ra, sched, t_max=2.0)
+    _drive(cb, rb, sched, t_max=2.0)
+    scores = np.array([0.0, 0.4, 0.0])
+    ca.health_scores = scores
+    cb.health_scores = scores
+    ca.enqueue(Request(prompt_tokens=10, decode_tokens=5, rid=10_000))
+    cb.enqueue(Request(prompt_tokens=10, decode_tokens=5, rid=10_000))
+    fa = state_lib.featurize(ca, PROF, include_health=True)
+    fb = state_lib.featurize(cb, PROF, include_health=True)
+    assert fa.shape == fb.shape
+    assert fa.shape[0] == state_lib.state_dim(3, include_health=True)
+    assert np.array_equal(fa, fb)
+    dims = state_lib.instance_dims(include_health=True)
+    assert fa[dims * 1 + dims - 2] == np.float32(0.4)      # score
+    assert fa[dims * 1 + dims - 1] == np.float32(1 - 1 / 2.5)
+
+
+# -- gateway failover --------------------------------------------------------
+
+def _gateway_run(backend, sched, failover, n=100, m=3, seed=9,
+                 **cfg_kw):
+    reqs = _reqs(n, seed=seed)
+    cfg = GatewayConfig(backend=backend, chaos=sched, failover=failover,
+                        max_time=2000.0, **cfg_kw)
+    gw = Gateway(cfg, (PROF,) * m, MixingImpactPolicy())
+    stats = gw.run(reqs)
+    return reqs, stats, gw
+
+
+def test_gateway_failover_conservation():
+    """Every admitted request terminates exactly once -- none lost,
+    none duplicated -- through crash + restart with bounded retries."""
+    sched = FaultSchedule(crashes=(Crash(2.0, 0, restart_after=5.0),
+                                   Crash(4.0, 1, restart_after=4.0)))
+    reqs, stats, gw = _gateway_run("py", sched, failover=True)
+    assert stats["orphaned"] > 0 and stats["retried"] > 0
+    assert all(r.phase in TERMINAL for r in reqs)
+    done = [r for r in reqs if r.phase is Phase.DONE]
+    assert len({r.rid for r in done}) == len(done)
+    assert len(done) + stats["shed"] + stats["cancelled"] == len(reqs)
+    assert len(gw.cluster.completed) == len(done)
+
+
+def test_gateway_retry_budget_exhaustion_sheds():
+    # a repeatedly-crashing fleet (always restarting, so the run
+    # drains): the retry budget must bound per-request work
+    sched = FaultSchedule(crashes=tuple(
+        Crash(0.5 + 0.5 * k, k % 2, restart_after=0.4)
+        for k in range(10)))
+    reqs, stats, _ = _gateway_run("py", sched, failover=True,
+                                  n=40, m=2, max_retries=1,
+                                  retry_backoff_s=0.05)
+    assert all(r.phase in TERMINAL for r in reqs)
+    shed_by_retry = [r for r in reqs
+                     if r.phase is Phase.SHED and r.retries > 0]
+    assert shed_by_retry, "budget exhaustion never triggered"
+    assert all(r.retries == 2 for r in shed_by_retry)   # budget + 1
+    assert max((r.retries for r in reqs), default=0) <= 2
+    assert stats["shed"] >= len(shed_by_retry)
+
+
+def test_gateway_retry_backoff_is_exponential():
+    gw = Gateway(GatewayConfig(failover=True, retry_backoff_s=0.25),
+                 (PROF,) * 2, MixingImpactPolicy())
+    req = Request(prompt_tokens=10, decode_tokens=5)
+    gw._on_orphans([req])
+    gw._on_orphans([heapq_pop(gw)])
+    assert req.retries == 2
+    # second backoff doubles (both enqueued at t=0)
+    assert gw._retry_q[0][0] == pytest.approx(0.5)
+
+
+def heapq_pop(gw):
+    import heapq
+    return heapq.heappop(gw._retry_q)[2]
+
+
+def test_gateway_chaos_parity_py_vec():
+    sched = FaultSchedule(crashes=(Crash(2.0, 0, restart_after=6.0),),
+                          stragglers=(Straggler(1.0, 8.0, 2,
+                                                factor=3.0),))
+    ra, sa, _ = _gateway_run("py", sched, failover=True,
+                             hedge_after_s=3.0)
+    rb, sb, _ = _gateway_run("vec", sched, failover=True,
+                             hedge_after_s=3.0)
+    _assert_parity(ra, rb)
+    assert sa["orphaned"] == sb["orphaned"]
+    assert sa["hedged"] == sb["hedged"]
+    assert sa["retried"] == sb["retried"]
+    assert sa.get("breaker_trips") == sb.get("breaker_trips")
+
+
+def test_gateway_failover_beats_requeue_on_p95():
+    sched = FaultSchedule(crashes=(Crash(2.0, 0, restart_after=8.0),),
+                          stragglers=(Straggler(1.0, 10.0, 1,
+                                                factor=4.0),))
+    def p95(failover):
+        reqs, _, _ = _gateway_run("py", sched, failover=failover,
+                                  n=120, seed=3,
+                                  hedge_after_s=(3.0 if failover
+                                                 else None))
+        e2e = sorted(r.e2e for r in reqs if r.finished is not None)
+        return e2e[int(0.95 * (len(e2e) - 1))]
+    assert p95(True) < p95(False)
+
+
+def test_gateway_hedging_rescues_stuck_requests():
+    # one instance serves at 1/50 speed from t=0; hedging must move
+    # its stuck requests elsewhere
+    sched = FaultSchedule(stragglers=(Straggler(0.0, 1e9, 0,
+                                                factor=50.0),))
+    reqs, stats, gw = _gateway_run("py", sched, failover=True, n=60,
+                                   hedge_after_s=2.0, seed=12)
+    assert stats["hedged"] > 0
+    assert all(r.phase in TERMINAL for r in reqs)
+    hedged = [r for r in reqs if r.hedges > 0]
+    assert hedged and all(r.finished is not None for r in hedged)
+    assert gw.health.bad[0] > 0       # hedges attributed to the slow node
+
+
+def test_gateway_trace_parity_and_new_events():
+    sched = FaultSchedule(crashes=(Crash(2.0, 0, restart_after=5.0),),
+                          stragglers=(Straggler(0.0, 1e9, 1,
+                                                factor=40.0),))
+    def run(backend):
+        rec = tr.TraceRecorder()
+        reqs = _reqs(60, seed=9)
+        gw = Gateway(GatewayConfig(backend=backend, chaos=sched,
+                                   failover=True, hedge_after_s=2.0,
+                                   max_time=2000.0),
+                     (PROF,) * 3, MixingImpactPolicy(), trace=rec)
+        gw.run(reqs)
+        # rids are process-global; renumber by first appearance so two
+        # runs in one process compare equal
+        remap = {}
+        out = []
+        for ev in rec.events():
+            t, kind, rid, rest = ev[0], ev[1], ev[2], ev[3:]
+            out.append((t, kind, remap.setdefault(rid, len(remap)),
+                        *rest))
+        return out
+    ea, eb = run("py"), run("vec")
+    assert ea == eb
+    kinds = {e[1] for e in ea}
+    assert {tr.EV_FAIL, tr.EV_RECOVER, tr.EV_RETRY,
+            tr.EV_HEDGE} <= kinds
+
+
+def test_gateway_chaos_trace_validates():
+    from repro.serving import obs
+    rec = tr.TraceRecorder()
+    sched = FaultSchedule.random(seed=5, m=3, horizon=10.0,
+                                 n_crashes=1, n_stragglers=1)
+    reqs = _reqs(50, seed=5)
+    gw = Gateway(GatewayConfig(chaos=sched, failover=True,
+                               hedge_after_s=3.0, max_time=2000.0),
+                 (PROF,) * 3, MixingImpactPolicy(), trace=rec)
+    gw.run(reqs)
+    doc = obs.chrome_trace(rec)
+    assert obs.validate_chrome_trace(doc) == []
+
+
+def test_gateway_metrics_count_chaos_events():
+    sched = FaultSchedule(crashes=(Crash(2.0, 0, restart_after=5.0),))
+    reqs, stats, gw = _gateway_run("py", sched, failover=True)
+    snap = stats["snapshot"]
+    assert snap["orphaned"] == stats["orphaned"]
+    assert snap["retried"] == stats["retried"]
+    assert sum(t["orphaned"] for t in snap["tenants"].values()) \
+        == stats["orphaned"]
+
+
+# -- property: termination exactly once under random fault schedules --------
+
+@given(seed=st.integers(0, 60))
+@settings(max_examples=8, deadline=None)
+def test_chaos_termination_and_parity_property(seed):
+    """Any seeded crash+straggler schedule: every admitted request
+    reaches exactly one terminal phase on BOTH backends, and the two
+    backends agree bit-for-bit."""
+    sched = FaultSchedule.random(seed=seed, m=3, horizon=8.0,
+                                 n_crashes=2, n_stragglers=1)
+    ra, sa, _ = _gateway_run("py", sched, failover=True, n=60,
+                             seed=seed, max_retries=2,
+                             hedge_after_s=4.0)
+    rb, sb, _ = _gateway_run("vec", sched, failover=True, n=60,
+                             seed=seed, max_retries=2,
+                             hedge_after_s=4.0)
+    for reqs in (ra, rb):
+        assert all(r.phase in TERMINAL for r in reqs)
+        done = [r for r in reqs if r.phase is Phase.DONE]
+        assert len({r.rid for r in done}) == len(done)
+        assert all(r.finished is None for r in reqs
+                   if r.phase is not Phase.DONE)
+    _assert_parity(ra, rb)
+    assert sa["shed"] == sb["shed"]
+    assert sa["cancelled"] == sb["cancelled"]
+
+
+# -- S6: engine TTFT anchor --------------------------------------------------
+
+def test_engine_ttft_anchor_matches_simulator():
+    """The engine stamps first-token at the iteration's END (clock
+    advanced before the decode pass) -- the same anchor the simulator
+    uses, so fidelity deltas compare like-for-like."""
+    import jax
+    from repro.configs import get_config
+    from repro.models import params as params_lib
+    from repro.serving.engine import LLMInstance
+    from repro.serving.scheduler import FCFS
+    from repro.core.simulator import SimInstance
+    from repro.serving.scheduler import get_scheduler
+
+    cfg = get_config("llama-2-7b").reduced()
+    params = params_lib.init_params(jax.random.PRNGKey(0), cfg)
+    eng = LLMInstance(cfg, params, PROF, FCFS(), n_slots=2,
+                      cache_len=64)
+    sim = SimInstance(PROF, get_scheduler("fcfs"), 0)
+    re_ = Request(prompt_tokens=20, decode_tokens=6)
+    rs = Request(prompt_tokens=20, decode_tokens=6)
+    eng.submit(re_)
+    sim.submit(rs)
+    for _ in range(40):
+        eng.step()
+        if re_.finished is not None:
+            break
+    sim.run_until(60.0)
+    assert rs.finished is not None and re_.finished is not None
+    assert re_.first_token == pytest.approx(rs.first_token, rel=1e-9)
+    assert re_.finished == pytest.approx(rs.finished, rel=1e-9)
+
+
+def test_engine_speed_factor_scales_clock():
+    import jax
+    from repro.configs import get_config
+    from repro.models import params as params_lib
+    from repro.serving.engine import LLMInstance
+    from repro.serving.scheduler import FCFS
+
+    cfg = get_config("llama-2-7b").reduced()
+    params = params_lib.init_params(jax.random.PRNGKey(0), cfg)
+
+    def serve(speed):
+        eng = LLMInstance(cfg, params, PROF, FCFS(), n_slots=2,
+                          cache_len=64)
+        eng.speed_factor = speed
+        r = Request(prompt_tokens=20, decode_tokens=6)
+        eng.submit(r)
+        for _ in range(40):
+            eng.step()
+            if r.finished is not None:
+                break
+        return r.finished
+    assert serve(3.0) == pytest.approx(3.0 * serve(1.0), rel=1e-9)
