@@ -6,7 +6,7 @@ exploration decay) with (a) the sequential per-decision loop
 (`rl_router.train`), (b) the batched runner at 8 parallel episodes on
 the Python stepper (`batched_rl.train_batched`), and (c) the batched
 runner on the vectorized structure-of-arrays simulator
-(`sim_backend="vec"`: all episodes' instances packed into one vecsim
+(`backend="vec"`: all episodes' instances packed into one vecsim
 pool, fused span stepping -- decision-for-decision identical to (b),
 gated by tests/test_vecsim.py).  Reports episodes/sec for each plus
 speedups, heterogeneous-scenario throughput (mixed hardware,
@@ -67,7 +67,7 @@ def _cfg():
 def main():
     bcfg = batched_rl.BatchedRLConfig(n_envs=N_ENVS, m_max=M)
     vcfg = batched_rl.BatchedRLConfig(n_envs=N_ENVS, m_max=M,
-                                      sim_backend="vec")
+                                      backend="vec")
     # warmup: compile q_values (batch 1 and N_ENVS) + both learner shapes
     rl.train(_cfg(), PROF, lambda ep: _reqs(900 + ep), 1)
     batched_rl.train_batched(_cfg(), _scenario, N_ENVS, bcfg=bcfg)
@@ -126,7 +126,7 @@ def main():
     het = batched_rl.train_batched(
         _cfg(), scenario_stream(0, n_requests=N), EPISODES,
         bcfg=batched_rl.BatchedRLConfig(n_envs=N_ENVS, m_max=6,
-                                        sim_backend="vec"))
+                                        backend="vec"))
     dt_het = time.time() - t0
     n_done = sum(h["n"] for h in het["history"])
     emit("batched_rl_hetero_vec_eps_per_s", dt_het / EPISODES * 1e6,

@@ -69,7 +69,7 @@ def main():
     with timed() as t_v100:
         rep_v100 = fid.run_fidelity(V100_LLAMA2_7B, fcfg,
                                     model_cfg=model_cfg, params=params)
-    _emit_fidelity("v100", rep_v100, t_v100["us"] / 3)
+    _emit_fidelity("v100", rep_v100, t_v100["us"] / len(fcfg.backends))
 
     # 2) the just-calibrated profile: the band IS the gate
     with timed() as t_calp:
@@ -77,14 +77,16 @@ def main():
                                    model_cfg=model_cfg, params=params)
     cal_rel = rep_cal["deltas"]["engine_vs_py"]["e2e"]["p95"]["rel"]
     v100_rel = rep_v100["deltas"]["engine_vs_py"]["e2e"]["p95"]["rel"]
-    emit("fidelity_calibrated", t_calp["us"] / 3,
+    emit("fidelity_calibrated", t_calp["us"] / len(fcfg.backends),
          f"within_band={int(abs(cal_rel) <= BAND)} "
          f"cal_e2e_p95_rel={cal_rel:+.4f}")
 
-    # vec must reproduce py bit for bit on the same stream
+    # vec and jax must reproduce py bit for bit on the same stream
     for rep in (rep_v100, rep_cal):
         assert rep["backends"]["vec"] == rep["backends"]["py"], \
             "vec backend diverged from the py stepper"
+        assert rep["backends"]["jax"] == rep["backends"]["py"], \
+            "jax backend diverged from the py stepper"
     assert abs(v100_rel) <= BAND, \
         f"V100 fidelity outside band: {v100_rel:+.4f}"
     assert abs(cal_rel) <= BAND, \

@@ -60,7 +60,7 @@ def main():
                                                     _reqs(100 + ep)),
                     EPISODES,
                     bcfg=batched_rl.BatchedRLConfig(
-                        n_envs=8, m_max=M, sim_backend="vec"),
+                        n_envs=8, m_max=M, backend="vec"),
                     valid_fn=lambda: Scenario.homogeneous(
                         PROF, M, _reqs(555)))
             else:
@@ -69,6 +69,28 @@ def main():
                                valid_fn=lambda: _reqs(555))
             rows[f"rl_{variant}"] = eval_policy(
                 lambda r, c=cfg, a=out["agent"]: rl.evaluate(c, PROF, a, r))
+        if PAPER_SCALE:
+            # uniform-vs-PER quality gate (Fig. 1b carry-over): the
+            # guided variant again with prioritized replay on the jax
+            # registry backend (hybrid pool: long spans on the jitted
+            # kernel, short ones on the numpy fast path)
+            cfg_per = rl.RouterConfig(
+                variant="guided", n_instances=M, seed=0,
+                explore_episodes=24, q_arch="decomposed")
+            out_per = batched_rl.train_batched(
+                cfg_per,
+                lambda ep: Scenario.homogeneous(PROF, M,
+                                                _reqs(100 + ep)),
+                EPISODES,
+                bcfg=batched_rl.BatchedRLConfig(
+                    n_envs=8, m_max=M, backend="jax",
+                    pool_kwargs={"min_span_ticks": 32},
+                    prioritized=True),
+                valid_fn=lambda: Scenario.homogeneous(
+                    PROF, M, _reqs(555)))
+            rows["rl_guided_per"] = eval_policy(
+                lambda r, c=cfg_per, a=out_per["agent"]:
+                    rl.evaluate(c, PROF, a, r))
     rr = rows["round_robin"]["e2e_mean"]
     per = t["us"] / len(rows)
     for name, row in rows.items():
@@ -82,6 +104,11 @@ def main():
         min(rows["rl_baseline"]["e2e_mean"],
             rows["rl_aware"]["e2e_mean"]) + 1e-6
     assert rows["rl_guided"]["e2e_mean"] <= rr * 1.15
+    if PAPER_SCALE:
+        # PER must not degrade the guided router's held-out quality
+        # (Schaul et al.: prioritization helps or ties at this scale)
+        assert rows["rl_guided_per"]["e2e_mean"] <= \
+            rows["rl_guided"]["e2e_mean"] * 1.10
 
 
 if __name__ == "__main__":

@@ -13,6 +13,18 @@ def emit(name: str, us_per_call: float, derived: str):
     print(row, flush=True)
 
 
+def emit_direction(**directions):
+    """Declare trend-gate directions for this bench's metric keys:
+    ``emit_direction(episodes_per_sec="high", us="low")``.  Keys match
+    exactly or as prefixes.  run.py folds these into the bench's
+    ``--json`` entry, so a refreshed ``baseline.json`` carries its own
+    direction metadata and ``trend.py`` never has to guess a new key's
+    direction from its global prefix lists (which would let e.g. an
+    ``episodes_per_sec_*`` collapse gate in the wrong direction)."""
+    pairs = " ".join(f"{k}={v}" for k, v in sorted(directions.items()))
+    print(f"#direction {pairs}", flush=True)
+
+
 @contextmanager
 def timed():
     t0 = time.time()

@@ -36,6 +36,7 @@ MODULES = [
     ("fig1b", "benchmarks.bench_fig1b_rl"),
     ("gateway", "benchmarks.bench_gateway"),
     ("vecsim", "benchmarks.bench_vecsim"),
+    ("jaxsim", "benchmarks.bench_jaxsim"),
     ("fidelity", "benchmarks.bench_fidelity"),
     ("batched_rl", "benchmarks.bench_batched_rl"),
     ("fig5", "benchmarks.bench_fig5_metrics"),
@@ -55,6 +56,20 @@ def _parse_rows(stdout: str):
             rows.append({"name": parts[0], "us_per_call": parts[1],
                          "derived": parts[2]})
     return rows
+
+
+def _parse_directions(stdout: str):
+    """Collect ``#direction key=low|high ...`` declarations (see
+    benchmarks.common.emit_direction) into one per-bench map."""
+    dirs = {}
+    for line in stdout.splitlines():
+        if not line.startswith("#direction "):
+            continue
+        for pair in line[len("#direction "):].split():
+            key, _, d = pair.partition("=")
+            if d in ("low", "high"):
+                dirs[key] = d
+    return dirs
 
 
 def _pop_opt(args, flag):
@@ -113,9 +128,12 @@ def main() -> None:
                              "reason": f"exit {proc.returncode}",
                              "stderr_tail": tail})
             print(f"# {key} FAILED in {dt:.1f}s", flush=True)
-        results.append({"bench": key, "ok": ok,
-                        "seconds": round(dt, 2),
-                        "rows": _parse_rows(proc.stdout)})
+        result = {"bench": key, "ok": ok, "seconds": round(dt, 2),
+                  "rows": _parse_rows(proc.stdout)}
+        dirs = _parse_directions(proc.stdout)
+        if dirs:
+            result["directions"] = dirs
+        results.append(result)
     if json_path:
         with open(json_path, "w") as f:
             json.dump({"results": results, "failures": failures}, f,

@@ -49,6 +49,23 @@ def direction(key: str) -> Optional[str]:
     return None
 
 
+def entry_direction(dirs: Dict[str, str], key: str) -> Optional[str]:
+    """Direction from a bench entry's own ``directions`` map (written
+    by ``emit_direction`` via run.py): exact key first, then the
+    LONGEST declared prefix.  Per-entry metadata beats the global
+    prefix lists, so a bench introducing e.g. ``episodes_per_sec_*``
+    keys declares their direction instead of hoping the append-only
+    global lists happen to match."""
+    if key in dirs:
+        return dirs[key]
+    best = None
+    for prefix, d in dirs.items():
+        if key.startswith(prefix) and \
+                (best is None or len(prefix) > len(best[0])):
+            best = (prefix, d)
+    return best[1] if best else None
+
+
 def row_direction(row_name: str) -> Optional[str]:
     """Direction for a BARE-value row (derived is a single number, no
     key=value pairs), inferred from the row name's ``_``-tokens -- e.g.
@@ -118,9 +135,14 @@ def compare(current: dict, baseline: dict, tol: float = 0.35,
             if bench in cur_b:
                 regressions.append(f"row {key}: missing from current run")
             continue
+        bench_dirs = base_b.get(key.split("/", 1)[0], {}) \
+            .get("directions") or {}
         for metric, base_v in base_m.items():
-            d = (row_direction(key.rsplit("/", 1)[-1])
-                 if metric == "_value" else direction(metric))
+            name = (key.rsplit("/", 1)[-1] if metric == "_value"
+                    else metric)
+            d = entry_direction(bench_dirs, name) or \
+                (row_direction(name) if metric == "_value"
+                 else direction(name))
             if d is None or metric not in cur_m:
                 continue
             cur_v = cur_m[metric]

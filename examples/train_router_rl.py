@@ -54,7 +54,8 @@ if __name__ == "__main__":
     sequential = "--sequential" in sys.argv
     hetero = "--hetero" in sys.argv
     use_predictor = "--predictor" in sys.argv
-    backend = "vec" if "--vec" in sys.argv else "py"
+    backend = ("jax" if "--jax" in sys.argv
+               else "vec" if "--vec" in sys.argv else "py")
     for name in ("round_robin", "jsq", "impact_greedy"):
         st = run_heuristic(Cluster(PROF, M), reqs(991),
                            make_policy(name, PROF))
@@ -65,10 +66,10 @@ if __name__ == "__main__":
                           q_arch="decomposed", seed=0)
     if hetero:
         scen_fn = scenario_stream(0, n_requests=N)
-        bcfg = batched_rl.BatchedRLConfig(m_max=6, sim_backend=backend)
+        bcfg = batched_rl.BatchedRLConfig(m_max=6, backend=backend)
     else:
         scen_fn = lambda ep: scen(100 + ep, f"paper-{ep}")  # noqa: E731
-        bcfg = batched_rl.BatchedRLConfig(m_max=M, sim_backend=backend)
+        bcfg = batched_rl.BatchedRLConfig(m_max=M, backend=backend)
     predictor = None
     if use_predictor:
         from repro.core.predictor import quick_bucket_predictor

@@ -28,6 +28,7 @@ runner trains >3x faster on 2 CPU cores (benchmarks/bench_batched_rl).
 """
 from __future__ import annotations
 
+import warnings
 from collections import deque
 from dataclasses import dataclass
 from typing import Callable, Dict, List, Optional, Sequence
@@ -66,12 +67,33 @@ class BatchedRLConfig:
     # IS-weight correction (the packed-row weight column).  Uniform
     # sampling (False) remains the validated default.
     prioritized: bool = False
-    # simulator backend: "py" steps each episode's SimInstances in
-    # Python; "vec" packs ALL episodes' instances into one shared
-    # vecsim pool and advances every instance of every episode in
-    # fused vector rounds (decision-for-decision identical; see
-    # core.vecsim).  benchmarks/bench_batched_rl.py gates the speedup.
-    sim_backend: str = "py"
+    # simulator backend, resolved through the ``core.backends``
+    # registry: "py" steps each episode's SimInstances in Python;
+    # "vec" packs ALL episodes' instances into one shared vecsim pool
+    # and advances every instance of every episode in fused vector
+    # rounds (decision-for-decision identical; see core.vecsim);
+    # "jax" runs the same pool's round loop as one jitted device
+    # program (core.jaxsim; bit-parity contract in docs/BACKENDS.md).
+    # benchmarks/bench_batched_rl.py and bench_jaxsim.py gate the
+    # speedups.
+    backend: str = "py"
+    # extra kwargs for the backend's ``make_pool`` (e.g. the jax
+    # pool's hybrid threshold: {"min_span_ticks": 32} keeps short
+    # spans on the numpy fast path and sends only long drain spans to
+    # the jitted kernel)
+    pool_kwargs: Optional[Dict] = None
+    # DEPRECATED alias for ``backend`` (pre-registry spelling); when
+    # set it wins, with a DeprecationWarning.
+    sim_backend: Optional[str] = None
+
+    def __post_init__(self):
+        if self.sim_backend is not None:
+            warnings.warn(
+                "BatchedRLConfig.sim_backend is deprecated; use "
+                "BatchedRLConfig(backend=...) — backends now resolve "
+                "through the core.backends registry",
+                DeprecationWarning, stacklevel=3)
+            self.backend = self.sim_backend
 
 
 class _Slot:
@@ -166,14 +188,69 @@ def _act_padded(agent, cfg, slots, b_full: int, m_max: int,
     return acts[:b]
 
 
-def _flush_one(agent, slot: _Slot, gp: np.ndarray, nstep: int):
+def _flush_one(agent, slot: _Slot, gp: np.ndarray, nstep: int,
+               out: Optional[list] = None):
     """Emit the oldest window entry's truncated n-step return.  Rewards
     live in one per-episode log (`slot.rew`) indexed by decision, so a
-    decision costs one append instead of one append per window entry."""
+    decision costs one append instead of one append per window entry.
+    With ``out`` the transition is collected for one batched insert at
+    the end of the round (``_observe_packed``) instead of observed
+    immediately; insertion order is preserved either way."""
     s0, a0, t0 = slot.window.popleft()
     rs = slot.rew[t0:t0 + nstep]
     ret = float(np.asarray(rs, np.float64) @ gp[:len(rs)])
-    agent.observe(s0, a0, ret, slot.s_pad, 1.0, slot.mask_pad)
+    if out is None:
+        agent.observe(s0, a0, ret, slot.s_pad, 1.0, slot.mask_pad)
+    else:
+        out.append((s0, a0, ret, slot.s_pad, 1.0, slot.mask_pad))
+
+
+_PACK_ROWS = None
+
+
+def _pack_rows_fn():
+    """Jitted replay-row packer: one concatenate producing the exact
+    ``ReplayBuffer`` row layout [s | s2 | a | r | done | mask2 | 1.0]
+    for a whole round's transitions (device-resident when XLA has an
+    accelerator; one fused op on CPU)."""
+    global _PACK_ROWS
+    if _PACK_ROWS is None:
+        import jax
+        import jax.numpy as jnp
+
+        @jax.jit
+        def pack(s, a, r, s2, done, mask2):
+            f32 = jnp.float32
+            return jnp.concatenate(
+                [s.astype(f32), s2.astype(f32),
+                 a[:, None].astype(f32), r[:, None].astype(f32),
+                 done[:, None].astype(f32), mask2.astype(f32),
+                 jnp.ones((s.shape[0], 1), f32)], axis=1)
+        _PACK_ROWS = pack
+    return _PACK_ROWS
+
+
+def _observe_packed(agent, trans: list):
+    """Insert a round's transitions [(s, a, r, s2, done, mask2), ...]
+    via the jitted packer + ``ReplayBuffer.add_rows`` -- bit-identical
+    to per-transition ``agent.observe`` calls in the same order
+    (asserted in tests/test_jaxsim.py).  Reward centering is an
+    order-dependent EMA folded into ``r`` at observe time, so that
+    configuration keeps the sequential path."""
+    if not trans:
+        return
+    if agent.cfg.center_rewards:
+        for t in trans:
+            agent.observe(*t)
+        return
+    rows = _pack_rows_fn()(
+        np.stack([t[0] for t in trans]),
+        np.asarray([t[1] for t in trans], np.int32),
+        np.asarray([t[2] for t in trans], np.float64),
+        np.stack([t[3] for t in trans]),
+        np.asarray([t[4] for t in trans], np.float64),
+        np.stack([t[5] for t in trans]))
+    agent.buffer.add_rows(np.asarray(rows))
 
 
 def _step_fused(slots: List[_Slot], actions: List[int], pool,
@@ -263,9 +340,10 @@ def train_batched(cfg: rl.RouterConfig,
     best = None
     started = 0
     pool = None
-    if bcfg.sim_backend == "vec":
-        from repro.core.vecsim import VecSimPool
-        pool = VecSimPool(min(bcfg.n_envs, n_episodes))
+    if bcfg.backend != "py":
+        from repro.core.backends import make_backend
+        pool = make_backend(bcfg.backend).make_pool(
+            min(bcfg.n_envs, n_episodes), **(bcfg.pool_kwargs or {}))
     slots: List[_Slot] = []
     while started < min(bcfg.n_envs, n_episodes):
         slots.append(_Slot(cfg, scenario_fn(started), started, m_max,
@@ -314,6 +392,7 @@ def train_batched(cfg: rl.RouterConfig,
                 include_hardware=cfg.include_hardware_features,
                 include_cache=cfg.include_cache_features,
                 include_health=cfg.include_health_features)
+        flush: List[tuple] = []
         for i, sl in enumerate(slots):
             a_pad = int(acts[i])
             s_prev_pad = sl.s_pad
@@ -328,10 +407,10 @@ def train_batched(cfg: rl.RouterConfig,
                 sl.window.append((s_prev_pad, a_pad, len(sl.rew)))
                 sl.rew.append(r / scale)
                 if len(sl.window) > cfg.nstep:
-                    _flush_one(agent, sl, gp, cfg.nstep)
+                    _flush_one(agent, sl, gp, cfg.nstep, out=flush)
             else:
-                agent.observe(s_prev_pad, a_pad, r / scale, sl.s_pad,
-                              float(done), sl.mask_pad)
+                flush.append((s_prev_pad, a_pad, r / scale, sl.s_pad,
+                              float(done), sl.mask_pad))
             sl.reward += r
             sl.ticks += 1
             if done:
@@ -339,7 +418,12 @@ def train_batched(cfg: rl.RouterConfig,
                 finished.append(sl)
         for sl in finished:
             while sl.window:
-                _flush_one(agent, sl, gp, cfg.nstep)
+                _flush_one(agent, sl, gp, cfg.nstep, out=flush)
+        # one packed insert per round; the learner only reads the
+        # buffer at the NEXT round's learn call, so deferring to here
+        # is invisible to training (order within the round preserved)
+        _observe_packed(agent, flush)
+        for sl in finished:
             if pool is not None:
                 sl.env.cluster.sync_all()     # max_time stragglers
             stats = summarize(sl.scenario.requests)
@@ -393,17 +477,24 @@ def evaluate_scenarios(cfg: rl.RouterConfig, agent,
                        scenarios: Sequence[Scenario],
                        predict_decode: Optional[Callable] = None,
                        m_max: Optional[int] = None,
-                       sim_backend: str = "py") -> List[Dict]:
+                       backend: str = "py",
+                       sim_backend: Optional[str] = None) -> List[Dict]:
     """Greedy (epsilon=0, no learning) batched evaluation; one stats dict
     per scenario, same fields as `rl_router.evaluate`.  With a single
     homogeneous scenario of width cfg.n_instances this reproduces the
-    sequential evaluate decision for decision (on either simulator
-    backend)."""
+    sequential evaluate decision for decision (on any registry
+    backend).  ``sim_backend=`` is the deprecated alias of
+    ``backend=``."""
+    if sim_backend is not None:
+        warnings.warn(
+            "evaluate_scenarios(sim_backend=...) is deprecated; use "
+            "backend=...", DeprecationWarning, stacklevel=2)
+        backend = sim_backend
     m_max = m_max or max([cfg.n_instances] + [s.m for s in scenarios])
     pool = None
-    if sim_backend == "vec":
-        from repro.core.vecsim import VecSimPool
-        pool = VecSimPool(len(scenarios))
+    if backend != "py":
+        from repro.core.backends import make_backend
+        pool = make_backend(backend).make_pool(len(scenarios))
     slots = [_Slot(cfg, s, ep=0, m_max=m_max,
                    predict_decode=predict_decode, explore=False,
                    pool=pool, pool_ep=i)

@@ -207,6 +207,29 @@ class ReplayBuffer:
         self.ptr = (self.ptr + 1) % self.cap
         self.size = min(self.size + 1, self.cap)
 
+    def add_rows(self, rows: np.ndarray):
+        """Bulk-insert pre-packed rows (layout exactly as ``add``;
+        the batched trainer packs them on device, see
+        ``batched_rl._observe_packed``).  Equivalent to n sequential
+        ``add`` calls: priorities only move in ``update_priorities``,
+        so every row enters at the same ``max_prio``, and the ring
+        pointer / write sequence advance row by row."""
+        rows = np.asarray(rows, np.float32)
+        n = len(rows)
+        if n == 0:
+            return
+        if n > self.cap:          # only the last ``cap`` rows survive
+            rows = rows[-self.cap:]
+            self.seq += n - self.cap
+            n = self.cap
+        idx = (self.ptr + np.arange(n)) % self.cap
+        self.data[idx] = rows
+        self.prio[idx] = self.max_prio
+        self.write_seq[idx] = self.seq + 1 + np.arange(n)
+        self.seq += n
+        self.ptr = int((self.ptr + n) % self.cap)
+        self.size = min(self.size + n, self.cap)
+
     def sample(self, rng: np.random.Generator, batch: int) -> np.ndarray:
         idx = rng.integers(0, self.size, size=batch)
         return self.data[idx]

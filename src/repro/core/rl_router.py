@@ -19,6 +19,7 @@ evidently intended penalty  + w_k * h.
 """
 from __future__ import annotations
 
+import warnings
 from collections import deque
 from dataclasses import dataclass
 from typing import Callable, Dict, Optional, Sequence
@@ -198,15 +199,20 @@ class RoutingEnv:
     wide -- the paper's setup) or a sequence of per-instance profiles
     (heterogeneous cluster; its length overrides cfg.n_instances).
 
-    ``sim_backend="vec"`` steps the episode on the vectorized
-    structure-of-arrays simulator (`core.vecsim`); passing a shared
-    ``pool`` + ``pool_ep`` instead packs this episode into a
-    multi-episode `VecSimPool` so the batched trainer advances all its
-    episodes in fused rounds."""
+    ``backend`` names any ``core.backends`` registry backend:
+    ``"vec"`` steps the episode on the vectorized structure-of-arrays
+    simulator (`core.vecsim`), ``"jax"`` on the device-resident jitted
+    round loop (`core.jaxsim`).  Passing a shared ``pool`` +
+    ``pool_ep`` instead packs this episode into a multi-episode pool
+    so the batched trainer advances all its episodes in fused rounds.
+    ``sim_backend=`` is the deprecated pre-registry alias of
+    ``backend=``."""
 
     def __init__(self, cfg: RouterConfig, profile,
                  predict_decode: Optional[Callable] = None,
-                 sim_backend: str = "py", pool=None, pool_ep: int = 0):
+                 backend: Optional[str] = None,
+                 sim_backend: Optional[str] = None,
+                 pool=None, pool_ep: int = 0):
         self.cfg = cfg
         if isinstance(profile, HardwareProfile):
             self.profiles = (profile,) * cfg.n_instances
@@ -214,7 +220,15 @@ class RoutingEnv:
             self.profiles = tuple(profile)
         self.profile = self.profiles[0]     # router-level reference
         self.m = len(self.profiles)
-        self.sim_backend = "vec" if pool is not None else sim_backend
+        if sim_backend is not None:
+            warnings.warn(
+                "RoutingEnv(sim_backend=...) is deprecated; use "
+                "backend=... — backends now resolve through the "
+                "core.backends registry", DeprecationWarning,
+                stacklevel=2)
+            backend = backend or sim_backend
+        backend = backend or "py"
+        self.sim_backend = "vec" if pool is not None else backend
         self._pool = pool
         self._pool_ep = pool_ep
         # d-hat: estimated decode tokens for a request (predictor hook;

@@ -324,10 +324,12 @@ class Cluster:
     case ``n_instances`` must match and ``cluster.profile`` is the first
     entry (the router-level reference profile).
 
-    ``backend="vec"`` returns the vectorized structure-of-arrays
-    implementation (`core.vecsim.VecCluster`, decision-for-decision
-    identical; O(rounds) stepping instead of O(requests x instances)) --
-    the Python stepper remains the reference oracle."""
+    ``backend`` resolves through the ``core.backends`` registry:
+    ``"vec"`` returns the vectorized structure-of-arrays implementation
+    (`core.vecsim.VecCluster`, decision-for-decision identical;
+    O(rounds) stepping instead of O(requests x instances)), ``"jax"``
+    its device-resident jitted subclass (`core.jaxsim`) -- the Python
+    stepper remains the reference oracle."""
 
     def __new__(cls, profile=None, n_instances: int = 0,
                 scheduler: str = "fcfs", dt: float = 0.02,
@@ -335,13 +337,15 @@ class Cluster:
                 n_slots: Optional[int] = None, backend: str = "py",
                 prefix_cache_tokens: int = 0, prefix_block: int = 32,
                 trace=None):
-        if cls is Cluster and backend == "vec":
-            from repro.core.vecsim import VecCluster
-            # not a Cluster subclass, so __init__ below is not re-run
-            return VecCluster(profile, n_instances, scheduler, dt,
-                              chunked_prefill, n_slots,
-                              prefix_cache_tokens=prefix_cache_tokens,
-                              prefix_block=prefix_block, trace=trace)
+        if cls is Cluster and backend != "py":
+            from repro.core.backends import make_backend
+            # registry backends are not Cluster subclasses, so
+            # __init__ below is not re-run on the returned object
+            return make_backend(backend).make_cluster(
+                profile, n_instances, scheduler=scheduler, dt=dt,
+                chunked_prefill=chunked_prefill, n_slots=n_slots,
+                prefix_cache_tokens=prefix_cache_tokens,
+                prefix_block=prefix_block, trace=trace)
         return super().__new__(cls)
 
     def __init__(self, profile, n_instances: int,

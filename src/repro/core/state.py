@@ -264,17 +264,8 @@ def featurize_vec_many(clusters, profiles, predict_decodes,
     block[:, 7] = np.where(t_c > 1.0, 1.0, t_c) * has_res
     alive = ~pool.failed[lanes_cat]
     if include_impact:
-        p_head = np.zeros(n)
-        d_head = np.zeros(n)
-        has_head = np.zeros(n, bool)
-        pos = 0
-        for c, head, pd in zip(clusters, heads, predict_decodes):
-            if head is not None:
-                d_hat = pd(head) if pd else head.decode_tokens
-                p_head[pos:pos + c.m] = head.prompt_tokens
-                d_head[pos:pos + c.m] = d_hat
-                has_head[pos:pos + c.m] = True
-            pos += c.m
+        p_head, d_head, has_head = _impact_heads(clusters, heads,
+                                                 predict_decodes, n)
         score = impact.mixing_vec(
             pool.grad1[lanes_cat], pool.grad2[lanes_cat],
             pool.eps_lat[lanes_cat], p_head, d_head, ctx + q_prompt,
@@ -290,36 +281,74 @@ def featurize_vec_many(clusters, profiles, predict_decodes,
         block[:, hb + 2] = np.minimum(pool.cap[lanes_cat]
                                       * HW_CAP_SCALE, 1.0)
     if include_cache:
-        # PrefixCache queries are plain dict lookups on the SAME object
-        # the stepping code mutates, so this scalar loop produces the
-        # exact floats the scalar path does
-        cb = (INSTANCE_DIMS + (1 if include_impact else 0)
-              + (HW_DIMS if include_hardware else 0))
-        pos_c = 0
-        for c, head in zip(clusters, heads):
-            hashes = (getattr(head, "prefix_hashes", None)
-                      if head is not None else None)
-            if hashes:
-                for j, lane in enumerate(c.lane_ids):
-                    pc = pool.lane_cache[int(lane)]
-                    if pc is not None:
-                        block[pos_c + j, cb] = pc.hit_fraction(
-                            head.prompt_tokens, hashes)
-            pos_c += c.m
+        _fill_cache_col(block, clusters, heads, pool, include_impact,
+                        include_hardware)
     if include_health:
-        hlb = (INSTANCE_DIMS + (1 if include_impact else 0)
-               + (HW_DIMS if include_hardware else 0)
-               + (CACHE_DIMS if include_cache else 0))
-        pos_h = 0
-        for c in clusters:
-            hs = getattr(c, "health_scores", None)
-            if hs is not None:
-                k = min(c.m, len(hs))
-                block[pos_h:pos_h + k, hlb] = np.asarray(hs)[:k]
-            pos_h += c.m
-        # slowdown 1 - 1/speed: elementwise match of the scalar path
-        block[:, hlb + 1] = 1.0 - 1.0 / pool.speed[lanes_cat]
+        _fill_health_cols(block, clusters, pool, lanes_cat,
+                          include_impact, include_hardware,
+                          include_cache)
     block *= alive[:, None]
+    return _assemble(block, clusters, heads, profiles,
+                     predict_buckets, dims, n_buckets)
+
+
+def _impact_heads(clusters, heads, predict_decodes, n):
+    """Per-lane head-of-queue prompt/decode arrays (host: reads Request
+    objects) shared by the numpy and jax featurize paths."""
+    p_head = np.zeros(n)
+    d_head = np.zeros(n)
+    has_head = np.zeros(n, bool)
+    pos = 0
+    for c, head, pd in zip(clusters, heads, predict_decodes):
+        if head is not None:
+            d_hat = pd(head) if pd else head.decode_tokens
+            p_head[pos:pos + c.m] = head.prompt_tokens
+            d_head[pos:pos + c.m] = d_hat
+            has_head[pos:pos + c.m] = True
+        pos += c.m
+    return p_head, d_head, has_head
+
+
+def _fill_cache_col(block, clusters, heads, pool, include_impact,
+                    include_hardware):
+    # PrefixCache queries are plain dict lookups on the SAME object
+    # the stepping code mutates, so this scalar loop produces the
+    # exact floats the scalar path does
+    cb = (INSTANCE_DIMS + (1 if include_impact else 0)
+          + (HW_DIMS if include_hardware else 0))
+    pos_c = 0
+    for c, head in zip(clusters, heads):
+        hashes = (getattr(head, "prefix_hashes", None)
+                  if head is not None else None)
+        if hashes:
+            for j, lane in enumerate(c.lane_ids):
+                pc = pool.lane_cache[int(lane)]
+                if pc is not None:
+                    block[pos_c + j, cb] = pc.hit_fraction(
+                        head.prompt_tokens, hashes)
+        pos_c += c.m
+
+
+def _fill_health_cols(block, clusters, pool, lanes_cat, include_impact,
+                      include_hardware, include_cache):
+    hlb = (INSTANCE_DIMS + (1 if include_impact else 0)
+           + (HW_DIMS if include_hardware else 0)
+           + (CACHE_DIMS if include_cache else 0))
+    pos_h = 0
+    for c in clusters:
+        hs = getattr(c, "health_scores", None)
+        if hs is not None:
+            k = min(c.m, len(hs))
+            block[pos_h:pos_h + k, hlb] = np.asarray(hs)[:k]
+        pos_h += c.m
+    # slowdown 1 - 1/speed: elementwise match of the scalar path
+    block[:, hlb + 1] = 1.0 - 1.0 / pool.speed[lanes_cat]
+
+
+def _assemble(block, clusters, heads, profiles, predict_buckets, dims,
+              n_buckets):
+    """Per-cluster state vectors from the [n, dims] lane block plus the
+    4 router dims (host floats; identical on every backend)."""
     out = []
     pos = 0
     if predict_buckets is None:
@@ -345,6 +374,124 @@ def featurize_vec_many(clusters, profiles, predict_decodes,
                 0.0 if wait < 0.0 else wait)
         out.append(feats.astype(np.float32))
     return out
+
+
+_JAX_BLOCK = None          # lazily-built jitted block kernel
+
+
+def _jax_block():
+    global _JAX_BLOCK
+    if _JAX_BLOCK is not None:
+        return _JAX_BLOCK
+    import jax
+    import jax.numpy as jnp
+
+    from functools import partial
+
+    @partial(jax.jit, static_argnums=(17, 18))
+    def block_fn(st, p, d, pf, dtot, qps, cap, nslots, tdec, grad1,
+                 grad2, eps_lat, p_head, d_head, has_head, alpha, z,
+                 include_impact, include_hardware):
+        occ = st != 0
+        ctx = ((pf + d) * occ).sum(1)
+        left = (dtot - d) + ~occ * (1 << 62)
+        min_left = left.min(1)
+        has_res = occ.any(1)
+        lo_p, hi_p = (p < _E0) & occ, (p >= _E1) & occ
+        lo_d, hi_d = (d < _E0) & occ, (d >= _E1) & occ
+        cols = [lo_p.sum(1) / nslots,
+                (occ & ~lo_p & ~hi_p).sum(1) / nslots,
+                hi_p.sum(1) / nslots,
+                lo_d.sum(1) / nslots,
+                (occ & ~lo_d & ~hi_d).sum(1) / nslots,
+                hi_d.sum(1) / nslots]
+        free = (cap - ctx - qps) / cap
+        cols.append(jnp.minimum(1.0, jnp.maximum(-1.0, free)))
+        t_c = jnp.maximum(min_left, 0) * tdec / 10.0
+        cols.append(jnp.where(t_c > 1.0, 1.0, t_c) * has_res)
+        if include_impact:
+            # impact.mixing_vec transliterated; the final blend is the
+            # only mul+add chain, so it carries the runtime-zero FMA
+            # guard (see core.jaxsim module docs)
+            s = ctx + qps
+            t_p = grad1 * (p_head ** 2 + s)
+            r_p = jnp.where(t_p <= eps_lat, 1.0, 1.0 - t_p / eps_lat)
+            r_d = -grad2 * (s + p_head + d_head)
+            score = (alpha * r_p + z) + ((1 - alpha) * r_d + z)
+            cols.append(jnp.minimum(1.0, jnp.maximum(-5.0, score))
+                        * has_head)
+        if include_hardware:
+            cols.append(jnp.minimum(grad1 * HW_G1_SCALE, 1.0))
+            cols.append(jnp.minimum(grad2 * HW_G2_SCALE, 1.0))
+            cols.append(jnp.minimum(cap * HW_CAP_SCALE, 1.0))
+        return jnp.stack(cols, 1)
+
+    _JAX_BLOCK = block_fn
+    return block_fn
+
+
+def featurize_jax_many(clusters, profiles, predict_decodes,
+                       n_buckets: int = 8, include_impact: bool = True,
+                       alpha: float = 0.5, predict_buckets=None,
+                       include_hardware: bool = False,
+                       include_cache: bool = False,
+                       include_health: bool = False):
+    """Device twin of ``featurize_vec_many``: the per-lane instance
+    block (histograms, capacity fraction, earliest completion, impact,
+    hardware constants) is computed by one jitted XLA program in
+    64-bit mode with the same association order as the numpy path
+    (plus the jaxsim runtime-zero FMA guard on the impact blend), so
+    the produced float32 vectors are BIT-IDENTICAL to
+    ``featurize_vec_many`` (asserted in tests/test_jaxsim.py).  The
+    cache and health columns read host Python objects (PrefixCache
+    dicts, gateway health trackers) and are filled host-side exactly
+    as the numpy path fills them."""
+    from jax.experimental import enable_x64
+    pool = clusters[0].pool
+    lanes_cat = np.concatenate([c.lane_ids for c in clusters])
+    n = lanes_cat.size
+    hw = pool._hw
+    heads = [c.central[0] if c.central else None for c in clusters]
+    dims = instance_dims(include_impact, include_hardware,
+                         include_cache, include_health)
+    block = np.zeros((n, dims))
+    if include_impact:
+        p_head, d_head, has_head = _impact_heads(clusters, heads,
+                                                 predict_decodes, n)
+    else:
+        p_head = d_head = np.zeros(n)
+        has_head = np.zeros(n, bool)
+    # hw == 0 (fresh pool, nothing ever resident): one all-empty dummy
+    # slot column keeps shapes non-degenerate and produces the same
+    # values as numpy's empty-axis special case (occ is all-False, so
+    # histograms are 0 and T_c is masked by has_res)
+    w = max(hw, 1)
+    with enable_x64():
+        core = _jax_block()(
+            pool.s_state[:, :w][lanes_cat].astype(np.int64),
+            pool.s_prompt[:, :w][lanes_cat],
+            pool.s_decoded[:, :w][lanes_cat],
+            pool.s_prefilled[:, :w][lanes_cat],
+            pool.s_dtotal[:, :w][lanes_cat],
+            pool.qps[lanes_cat], pool.cap[lanes_cat],
+            pool.nslots[lanes_cat], pool.tdec[lanes_cat],
+            pool.grad1[lanes_cat], pool.grad2[lanes_cat],
+            pool.eps_lat[lanes_cat], p_head, d_head, has_head,
+            np.float64(alpha), np.float64(0.0),
+            include_impact, include_hardware)
+    ncore = (INSTANCE_DIMS + (1 if include_impact else 0)
+             + (HW_DIMS if include_hardware else 0))
+    block[:, :ncore] = np.asarray(core)
+    if include_cache:
+        _fill_cache_col(block, clusters, heads, pool, include_impact,
+                        include_hardware)
+    if include_health:
+        _fill_health_cols(block, clusters, pool, lanes_cat,
+                          include_impact, include_hardware,
+                          include_cache)
+    block *= ~pool.failed[lanes_cat][:, None]
+    return _assemble(block, clusters, heads, profiles,
+                     predict_buckets, dims, n_buckets)
 
 
 def pad_state(s: np.ndarray, m: int, m_max: int,

@@ -593,7 +593,15 @@ class VecSimPool:
 
     def _run_rounds(self, target: np.ndarray,
                     done: Dict[int, List[int]]):
-        """Round loop over an explicit full-width target vector."""
+        """Round loop over an explicit full-width target vector.
+
+        This is the backend override point: everything above it
+        (enqueue/route/collect, span bookkeeping) is pure SoA state
+        manipulation shared by every pooled backend, and everything
+        below is the per-round simulation semantics.  ``JaxSimPool``
+        (core.jaxsim) overrides ONLY this method to run the same
+        rounds as one jitted ``while_loop``; any future backend (e.g.
+        an accelerator-resident port) should do the same."""
         behind = self.clock < target
         if behind.any():
             runnable = ((self.res_cnt > 0) | (self.qcnt > 0)) \

@@ -174,14 +174,32 @@ def _chaos_schedule(args):
         n_bursts=args.chaos_bursts)
 
 
+def _resolve_backend(args) -> str:
+    """Map the CLI flags onto one core.backends registry name.
+    ``--backend`` names the backend directly ('sim' is the legacy
+    alias for the default stepper); ``--sim-backend`` is the
+    deprecated pre-registry spelling and wins when set."""
+    import warnings
+    backend = "py" if args.backend == "sim" else args.backend
+    if args.sim_backend is not None:
+        warnings.warn(
+            "--sim-backend is deprecated; use --backend py|vec|jax "
+            "(backends now resolve through the core.backends registry)",
+            DeprecationWarning, stacklevel=2)
+        if args.backend in ("sim", args.sim_backend):
+            backend = args.sim_backend
+    return backend
+
+
 def serve_gateway(args):
     """Online gateway over the simulator (default) or real engines."""
     cfg = _router_cfg(args)
     chaos = _chaos_schedule(args)
+    sim_backend = _resolve_backend(args)
     gcfg = GatewayConfig(queue_cap=args.queue_cap, on_full=args.on_full,
                          scheduler=args.scheduler,
                          chunked_prefill=args.chunked_prefill,
-                         backend=args.sim_backend,
+                         backend=sim_backend,
                          default_deadline_s=args.deadline,
                          prefix_cache_tokens=args.prefix_cache,
                          prefix_block=args.prefix_block,
@@ -304,8 +322,14 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--mode", choices=("sim", "engine", "gateway"),
                     default="sim")
-    ap.add_argument("--backend", choices=("sim", "engine"),
-                    default="sim", help="gateway cluster backend")
+    ap.add_argument("--backend",
+                    choices=("sim", "py", "vec", "jax", "engine"),
+                    default="sim",
+                    help="gateway cluster backend: any name from the "
+                    "core.backends registry ('py'/'vec'/'jax' pick the "
+                    "simulator stepper, 'engine' runs tiny real "
+                    "engines); 'sim' is the legacy alias for the "
+                    "default simulator stepper")
     ap.add_argument("--policy", default="mixing",
                     choices=("rl", "mixing", "mixing+cache", "jsq",
                              "rr", "sticky"),
@@ -314,9 +338,11 @@ def main():
                     choices=("poisson", "bursty", "diurnal"))
     ap.add_argument("--queue-cap", type=int, default=0,
                     help="admission queue bound (0 = unbounded)")
-    ap.add_argument("--sim-backend", choices=("py", "vec"), default="py",
-                    help="simulator stepper: python reference or the "
-                    "vectorized structure-of-arrays core")
+    ap.add_argument("--sim-backend", choices=("py", "vec", "jax"),
+                    default=None,
+                    help="DEPRECATED alias: use --backend py|vec|jax "
+                    "(backends now resolve through the core.backends "
+                    "registry)")
     ap.add_argument("--deadline", type=float, default=None,
                     help="client timeout in seconds (deferred requests "
                     "past it are cancelled)")

@@ -63,7 +63,10 @@ class FidelityConfig:
     dt: float = 0.02
     max_time: float = 600.0
     quantiles: Tuple[float, ...] = (0.5, 0.95, 0.99)
-    backends: Tuple[str, ...] = ("py", "vec", "engine")
+    # any core.backends registry names; pairwise deltas are reported
+    # for every pair, so the default covers both sim steppers, the
+    # jitted jax round loop and the real engine
+    backends: Tuple[str, ...] = ("py", "vec", "jax", "engine")
     # multi-turn session stream + prefix-cache model: follow-up prompts
     # extend the prior turn's context in whole ``prefix_block`` blocks
     # (prompt lengths stay on a bounded ladder of block multiples, so

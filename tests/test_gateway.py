@@ -373,6 +373,33 @@ def test_trend_gate_infers_direction_for_bare_value_rows():
     assert compare(base, base)[0] == []
 
 
+def test_trend_gate_per_entry_directions():
+    """A bench's baseline entry can carry its own ``directions`` map
+    (emit_direction -> run.py --json); it beats the global prefix
+    lists, so new keys gate the way the bench declared."""
+    from benchmarks.trend import compare
+
+    def rep(v, dirs):
+        return {"results": [{
+            "bench": "jaxsim", "ok": True, "seconds": 5.0,
+            "directions": dirs,
+            "rows": [{"name": "jaxsim_trainer", "us_per_call": "1",
+                      "derived": f"episodes_per_sec_vec={v} "
+                                 f"eps_gap={v}"}]}]}
+    # prefix match: episodes_per_sec_* declared higher-is-better
+    dirs = {"episodes_per_sec": "high", "eps_gap": "low"}
+    bad, _ = compare(rep(10.0, dirs), rep(40.0, dirs))
+    assert any("episodes_per_sec_vec" in r for r in bad)
+    assert compare(rep(45.0, dirs), rep(40.0, dirs))[0] == []
+    # exact-key override: the global lists call ``eps*`` higher-is-
+    # better, the entry says lower -- the entry wins
+    bad, _ = compare(rep(9.0, dirs), rep(5.0, dirs))
+    assert any("eps_gap" in r for r in bad)
+    ok, _ = compare(rep(4.0, {"eps_gap": "low"}),
+                    rep(5.0, {"eps_gap": "low"}))
+    assert ok == []
+
+
 def test_trend_gate_flags_missing_rows():
     from benchmarks.trend import compare
     cur = _report()

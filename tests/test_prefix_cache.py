@@ -179,7 +179,7 @@ def test_cache_feature_bit_exact_py_vs_vec():
     scn_p, scn_v = _session_scn(seed=11, n=90), _session_scn(seed=11,
                                                              n=90)
     env_p = rl.RoutingEnv(cfg, PROF)
-    env_v = rl.RoutingEnv(cfg, PROF, sim_backend="vec")
+    env_v = rl.RoutingEnv(cfg, PROF, backend="vec")
     s_p = env_p.reset(scn_p.requests)
     s_v = env_v.reset(scn_v.requests)
     done, steps = False, 0

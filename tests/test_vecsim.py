@@ -138,7 +138,7 @@ def test_featurize_bit_exact_against_python_stepper():
     cfg = rl.RouterConfig(variant="guided", n_instances=3,
                           q_arch="decomposed", seed=0)
     env_p = rl.RoutingEnv(cfg, PROF)
-    env_v = rl.RoutingEnv(cfg, PROF, sim_backend="vec")
+    env_v = rl.RoutingEnv(cfg, PROF, backend="vec")
     s_p = env_p.reset(_reqs(60, seed=5))
     s_v = env_v.reset(_reqs(60, seed=5))
     assert isinstance(env_v.cluster, VecCluster)
@@ -168,7 +168,7 @@ def test_featurize_hardware_block_bit_exact_and_hetero():
                           q_arch="decomposed", seed=0,
                           include_hardware_features=True)
     env_p = rl.RoutingEnv(cfg, profs)
-    env_v = rl.RoutingEnv(cfg, profs, sim_backend="vec")
+    env_v = rl.RoutingEnv(cfg, profs, backend="vec")
     s_p = env_p.reset(_reqs(50, seed=5))
     s_v = env_v.reset(_reqs(50, seed=5))
     dims = state_lib.instance_dims(True, True)
@@ -225,7 +225,7 @@ def test_featurize_vec_many_hardware_matches_single():
 
 def test_backlog_accounting_drains_to_zero_on_vec():
     cfg = rl.RouterConfig(variant="guided", n_instances=2, seed=0)
-    env = rl.RoutingEnv(cfg, PROF, sim_backend="vec")
+    env = rl.RoutingEnv(cfg, PROF, backend="vec")
     env.reset(_reqs(40, seed=9))
     done, added = False, False
     for _ in range(5000):
@@ -252,7 +252,7 @@ def test_evaluate_scenarios_vec_matches_sequential():
     seq = rl.evaluate(cfg, PROF, agent, ra)
     bat = batched_rl.evaluate_scenarios(
         cfg, agent, [Scenario.homogeneous(PROF, 3, rb)],
-        sim_backend="vec")[0]
+        backend="vec")[0]
     _assert_request_parity(ra, rb)
     for key in ("e2e_mean", "ttft_mean", "makespan", "preemptions",
                 "router_wait_mean", "spikes"):
@@ -273,11 +273,11 @@ def test_train_batched_vec_reproduces_python_backend():
     out_py = batched_rl.train_batched(
         cfg(), scenario, 5,
         bcfg=batched_rl.BatchedRLConfig(n_envs=3, m_max=3,
-                                        sim_backend="py"))
+                                        backend="py"))
     out_vec = batched_rl.train_batched(
         cfg(), scenario, 5,
         bcfg=batched_rl.BatchedRLConfig(n_envs=3, m_max=3,
-                                        sim_backend="vec"))
+                                        backend="vec"))
     for hp, hv in zip(out_py["history"], out_vec["history"]):
         assert hp["n"] == hv["n"] == 60
         assert hp["ticks"] == hv["ticks"]
@@ -292,7 +292,7 @@ def test_train_batched_vec_hetero_stream_completes():
     out = batched_rl.train_batched(
         cfg, scenario_stream(0, n_requests=40), 5,
         bcfg=batched_rl.BatchedRLConfig(n_envs=3, m_max=6,
-                                        sim_backend="vec"))
+                                        backend="vec"))
     assert [h["n"] for h in out["history"]] == [40] * 5
     assert out["agent"].buffer.size > 0
     assert len({(h["m"], h["pattern"]) for h in out["history"]}) > 1
