@@ -81,6 +81,26 @@ def main():
          f"within_band={int(abs(cal_rel) <= BAND)} "
          f"cal_e2e_p95_rel={cal_rel:+.4f}")
 
+    # 3) saturating stream: preemption fidelity.  Bursts overflow the
+    # KV budget so BOTH sim and engine must preempt -- the gate is that
+    # the preemption path itself agrees, not just uncontended latency.
+    sat_cfg = fid.FidelityConfig(
+        backends=("py", "vec", "engine"), n_requests=24, n_instances=1,
+        n_slots=2, cache_len=64, capacity_tokens=80,
+        prompt_lengths=(16, 32), decode_range=(4, 12), rate=6.0,
+        saturate=True)
+    with timed() as t_sat:
+        rep_sat = fid.run_fidelity(V100_LLAMA2_7B, sat_cfg,
+                                   model_cfg=model_cfg, params=params)
+    sat_d = rep_sat["deltas"]["engine_vs_py"]["preemptions"]
+    emit("fidelity_saturate", t_sat["us"] / len(sat_cfg.backends),
+         f"py_preempt={sat_d['a']} engine_preempt={sat_d['b']} "
+         f"both={int(sat_d['both_preempt'])}")
+    assert rep_sat["backends"]["vec"] == rep_sat["backends"]["py"], \
+        "vec diverged from py under saturation"
+    assert sat_d["both_preempt"], \
+        f"saturating stream failed to preempt both sides: {sat_d}"
+
     # vec and jax must reproduce py bit for bit on the same stream
     for rep in (rep_v100, rep_cal):
         assert rep["backends"]["vec"] == rep["backends"]["py"], \

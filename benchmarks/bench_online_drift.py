@@ -1,0 +1,212 @@
+"""Online-vs-frozen router under nonstationary drift.
+
+One seeded ``make_drift_scenario`` stream: mid-flight the tenant mix
+flips (chat-dominated -> heavy ingest, tenant churn included) while the
+chaos layer straggles one instance and crash/restarts another.  Three
+arms serve the IDENTICAL stream through identically-configured
+gateways:
+
+  * ``frozen``  -- RLPolicy with a Q-head offline-trained on the
+    PRE-flip mix only (health features enabled but never excited during
+    stationary training: the frozen head cannot know what a straggler
+    looks like);
+  * ``online``  -- ``training.OnlineTrainer`` warm-started from the SAME
+    checkpoint, learning on its own transition stream between arrival
+    windows, guided exploration + the r_mixing safe-fallback guardrail;
+  * ``mixing``  -- the workload-aware heuristic, the guardrail's
+    yardstick.
+
+Acceptance (asserted, and trend-gated via the emitted keys):
+
+  * **online adapts, frozen doesn't** -- post-flip P95 E2E of the
+    online arm is strictly below the frozen arm's;
+  * **the guardrail holds** -- in every arrival window the online arm's
+    P95 E2E stays within GUARD_BAND of the mixing heuristic's (worst
+    case is heuristic parity, never an unhinged Q-head).
+
+``ONLINE_DRIFT_SCALE=paper`` runs the nightly-sized configuration
+(longer stream, more offline episodes); the default ``smoke`` fits CI.
+Every clock is virtual, so all emitted latencies are
+machine-independent.
+"""
+from __future__ import annotations
+
+import os
+
+os.environ.setdefault(
+    "XLA_FLAGS",
+    "--xla_cpu_multi_thread_eigen=false intra_op_parallelism_threads=1")
+
+import tempfile
+
+import numpy as np
+
+from benchmarks.common import emit, emit_direction, timed
+from repro.core import rl_router as rl
+from repro.core import workload as wl
+from repro.core.profiles import V100_LLAMA2_7B
+from repro.serving.gateway import Gateway, GatewayConfig, OracleLength
+from repro.serving.policies import RLPolicy, make_gateway_policy
+from repro.serving.request import Request
+from repro.training.checkpoint import restore_learner, save_learner
+from repro.training.online import OnlineConfig, OnlineTrainer
+
+PROF = V100_LLAMA2_7B
+M = 4
+DRIFT_SEED = 23
+GUARD_BAND = 1.05            # online P95 <= 1.05x mixing, every window
+
+SCALES = {
+    # n_requests, rate, offline episodes, offline reqs/ep, windows
+    "smoke": (500, 3.0, 5, 220, 3),
+    "paper": (1600, 3.5, 14, 400, 5),
+}
+
+
+def _rcfg() -> rl.RouterConfig:
+    return rl.RouterConfig(variant="guided", n_instances=M,
+                           q_arch="decomposed", seed=0,
+                           include_health_features=True)
+
+
+def _pretrain(rcfg, episodes: int, n_req: int, rate: float, ckpt: str):
+    """Offline-train the frozen head on the PRE-flip tenant mix and
+    checkpoint the full learner state (the online arm's warm start)."""
+
+    def stream(ep: int):
+        return wl.make_tenant_scenario(
+            seed=1000 + ep, tenants=wl.DRIFT_PRE_TENANTS,
+            n_requests=n_req, rate=rate, pattern="poisson",
+            profiles=(PROF,) * M).requests
+
+    out = rl.train(rcfg, PROF, stream, n_episodes=episodes)
+    save_learner(ckpt, step=episodes, agent=out["agent"])
+    return out["agent"]
+
+
+def _clone(reqs):
+    return [Request(prompt_tokens=r.prompt_tokens,
+                    decode_tokens=r.decode_tokens, arrival=r.arrival,
+                    task=r.task, tenant=r.tenant) for r in reqs]
+
+
+def _p95(vals):
+    return float(np.quantile(np.asarray(vals, float), 0.95)) \
+        if len(vals) else float("nan")
+
+
+def _serve(scn, policy, trainer=None):
+    reqs = _clone(scn.requests)
+    # breaker_factor high: the circuit breaker must NOT mask the
+    # straggler (that would hand every arm the same avoidance for
+    # free) -- the health FEATURES stay live for the RL state, but
+    # acting on them is each policy's own job
+    gcfg = GatewayConfig(chaos=scn.meta["chaos"], failover=True,
+                         max_retries=3, max_time=7200.0,
+                         breaker_factor=50.0)
+    gw = Gateway(gcfg, scn.profiles, policy, length=OracleLength())
+    stats = gw.run(reqs)
+    done = [r for r in reqs if r.finished is not None]
+    flip = scn.meta["flip_time"]
+    post = [r.e2e for r in done if r.arrival >= flip]
+    t0 = min(r.arrival for r in done)
+    t1 = max(r.arrival for r in done) + 1e-9
+    return {"stats": stats, "done": done,
+            "p95": _p95([r.e2e for r in done]),
+            "post_p95": _p95(post),
+            "bounds": (t0, t1)}
+
+
+def _windows(res, n_windows: int):
+    """Per-arrival-window P95 E2E over ``n_windows`` equal spans."""
+    t0, t1 = res["bounds"]
+    edges = np.linspace(t0, t1, n_windows + 1)
+    out = []
+    for i in range(n_windows):
+        vals = [r.e2e for r in res["done"]
+                if edges[i] <= r.arrival < edges[i + 1]]
+        out.append(_p95(vals))
+    return out
+
+
+def main():
+    scale = os.environ.get("ONLINE_DRIFT_SCALE", "smoke")
+    n_req, rate, episodes, ep_req, n_windows = SCALES[scale]
+    rcfg = _rcfg()
+    scn = wl.make_drift_scenario(seed=DRIFT_SEED, n_requests=n_req,
+                                 rate=rate, profiles=(PROF,) * M,
+                                 straggler_factor=4.0)
+
+    with tempfile.TemporaryDirectory() as tmp:
+        ckpt = os.path.join(tmp, "warm")
+        with timed() as t_off:
+            _pretrain(rcfg, episodes, ep_req, rate, ckpt)
+        emit("online_drift_pretrain", t_off["us"] / max(episodes, 1),
+             f"episodes={episodes} reqs_per_ep={ep_req}")
+
+        frozen_agent = rl.make_agent(rcfg)
+        restore_learner(ckpt, frozen_agent)
+        with timed() as t_frozen:
+            frozen = _serve(scn, RLPolicy(frozen_agent, rcfg))
+
+        trainer = OnlineTrainer(rcfg, OnlineConfig(
+            warm_start=ckpt, eps=0.03, guard=True,
+            guard_window=48, guard_regret=0.12, guard_cooldown=20.0,
+            seed=0))
+        with timed() as t_online:
+            online = _serve(scn, trainer.policy, trainer)
+
+    with timed() as t_mix:
+        mixing = _serve(scn, make_gateway_policy("mixing", rcfg))
+
+    emit_direction(postflip_p95="low", p95="low", window_ratio="low",
+                   online_beats_frozen="high", adapt_gain="high",
+                   fallback_entries="low", learner_steps="high",
+                   transitions="high")
+
+    emit("online_drift_frozen", t_frozen["us"],
+         f"postflip_p95={frozen['post_p95']:.3f} "
+         f"p95_e2e={frozen['p95']:.3f} "
+         f"n={frozen['stats']['n']}")
+    tel = trainer.telemetry()
+    emit("online_drift_online", t_online["us"],
+         f"postflip_p95={online['post_p95']:.3f} "
+         f"p95_e2e={online['p95']:.3f} "
+         f"n={online['stats']['n']} "
+         f"learner_steps={trainer.agent.steps} "
+         f"transitions={int(tel['transitions'])} "
+         f"fallback_entries={int(tel['fallback_entries'])} "
+         f"explored={int(tel['explored'])}")
+    emit("online_drift_mixing", t_mix["us"],
+         f"postflip_p95={mixing['post_p95']:.3f} "
+         f"p95_e2e={mixing['p95']:.3f} "
+         f"n={mixing['stats']['n']}")
+
+    wins_online = _windows(online, n_windows)
+    wins_mixing = _windows(mixing, n_windows)
+    ratios = [o / m for o, m in zip(wins_online, wins_mixing)]
+    gain = (frozen["post_p95"] - online["post_p95"]) \
+        / frozen["post_p95"]
+    emit("online_drift_gate", t_online["us"],
+         f"adapt_gain={gain:.4f} "
+         f"online_beats_frozen={int(online['post_p95'] < frozen['post_p95'])} "
+         f"window_ratio_max={max(ratios):.4f} "
+         + " ".join(f"window_ratio_{i}={r:.4f}"
+                    for i, r in enumerate(ratios)))
+
+    # gate 1: the online arm adapts past the flip, the frozen one can't
+    assert online["post_p95"] < frozen["post_p95"], (
+        f"online post-flip P95 {online['post_p95']:.3f} not below "
+        f"frozen {frozen['post_p95']:.3f}")
+    # gate 2: the guardrail keeps every window within the mixing band
+    assert max(ratios) <= GUARD_BAND, (
+        f"online fell outside {GUARD_BAND}x of mixing in a window: "
+        f"{[f'{r:.3f}' for r in ratios]}")
+    # every arm served the whole stream (chaos conservation)
+    for arm in (frozen, online, mixing):
+        assert arm["stats"]["n"] + arm["stats"]["shed"] \
+            + arm["stats"]["cancelled"] == n_req
+
+
+if __name__ == "__main__":
+    main()

@@ -45,6 +45,7 @@ MODULES = [
     ("prefix_cache", "benchmarks.bench_prefix_cache"),
     ("roofline", "benchmarks.bench_roofline"),
     ("chaos", "benchmarks.bench_chaos"),
+    ("online_drift", "benchmarks.bench_online_drift"),
 ]
 
 

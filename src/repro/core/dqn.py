@@ -413,3 +413,43 @@ class DQNAgent:
     def load_state_dict(self, st):
         self.params, self.target, self.opt = (st["params"], st["target"],
                                               st["opt"])
+
+    # FULL learner state: everything a mid-stream resume needs to
+    # continue bit-exactly -- networks + optimizer + replay-buffer
+    # contents + reward-centering EMA + the numpy RNG.  The array-valued
+    # parts go in the tree (checksummed leaves); scalars and the 128-bit
+    # PCG64 state ride in ``extra`` (JSON keeps the big ints exact,
+    # msgpack caps at 64 bits).
+    def full_state(self) -> Tuple[Dict, Dict]:
+        import json
+        buf = self.buffer
+        tree = {"params": self.params, "target": self.target,
+                "opt": self.opt,
+                "replay": {"data": buf.data, "prio": buf.prio,
+                           "write_seq": buf.write_seq}}
+        extra = {"replay_ptr": buf.ptr, "replay_size": buf.size,
+                 "replay_seq": buf.seq,
+                 "replay_max_prio": buf.max_prio,
+                 "steps": self.steps, "r_mean": self.r_mean,
+                 "r_init": bool(self._r_init),
+                 "rng_state": json.dumps(self.rng.bit_generator.state)}
+        return tree, extra
+
+    def load_full_state(self, tree: Dict, extra: Dict):
+        import json
+        self.load_state_dict(tree)
+        buf = self.buffer
+        rp = tree["replay"]
+        # copy: deserialize hands out read-only np.frombuffer views
+        buf.data = np.array(rp["data"], np.float32)
+        buf.prio = np.array(rp["prio"], np.float64)
+        buf.write_seq = np.array(rp["write_seq"], np.int64)
+        buf.ptr = int(extra["replay_ptr"])
+        buf.size = int(extra["replay_size"])
+        buf.seq = int(extra["replay_seq"])
+        buf.max_prio = float(extra["replay_max_prio"])
+        self.steps = int(extra["steps"])
+        self.r_mean = float(extra["r_mean"])
+        self._r_init = bool(extra["r_init"])
+        self.rng.bit_generator.state = json.loads(extra["rng_state"])
+        self._pending_prio = None      # sampled-slot stamps are stale

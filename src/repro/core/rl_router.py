@@ -192,6 +192,78 @@ def guidance_from_scores(cluster, req: Request, d_hat: int,
     return out
 
 
+class BacklogTracker:
+    """Incremental Eq.(3) backlog-penalty accumulators over one cluster.
+
+    The penalty is ``-sum_unfinished (1 - frac_r) / t_hat_r`` with
+    d-hat/t-hat fixed per request; instead of rescanning every arrived
+    request every 0.02 s tick (which dominated episode wall time), we
+    maintain S = sum 1/t_hat and T = sum frac/t_hat via arrival /
+    decode / preempt / finish events and read ``penalty() = T - S`` in
+    O(1).  On the Python stepper the decode/preempt events come from
+    SimInstance hooks (installed here); the vec backend maintains the
+    same accumulators inside its fused round loop
+    (``pool.set_backlog_terms``).  Shared by RoutingEnv and the online
+    gateway trainer (training.online) so both compute identical
+    reward streams over identical event streams."""
+
+    def __init__(self, cluster, profile, predict_decode):
+        self.cluster = cluster
+        self.profile = profile
+        self.predict_decode = predict_decode
+        self.vec = getattr(cluster, "is_vec", False)
+        self.S = 0.0
+        self.T = 0.0
+        self.inv: Dict[int, tuple] = {}      # rid -> (1/d_hat, 1/t_hat)
+        if not self.vec:
+            for inst in cluster.instances:
+                inst.on_token = self.on_token
+                inst.on_preempt = self.on_preempt
+
+    def register(self, r) -> None:
+        """Account one request that entered the router queue."""
+        d_hat = max(self.predict_decode(r), 1)
+        inv_t = 1.0 / max(
+            self.profile.request_time(r.prompt_tokens, d_hat), 1e-3)
+        if self.vec:
+            self.cluster.pool.set_backlog_terms(
+                self.cluster.gid_of(r), self.cluster.ep, d_hat, inv_t)
+        else:
+            self.inv[r.rid] = (1.0 / d_hat, inv_t)
+            self.S += inv_t
+
+    def on_token(self, r):
+        iv = self.inv.get(r.rid)
+        if iv is None:
+            return
+        f0 = (r.decoded - 1) * iv[0]
+        if f0 >= 1.0:                 # progress already capped at 1
+            return
+        self.T += (min(r.decoded * iv[0], 1.0) - f0) * iv[1]
+
+    def on_preempt(self, r):
+        # called BEFORE reset_progress: r still holds its progress
+        iv = self.inv.get(r.rid)
+        if iv is not None and r.decoded:
+            self.T -= min(r.decoded * iv[0], 1.0) * iv[1]
+
+    def note_finished(self, done_now):
+        if self.vec:
+            return            # the pool settles S/T at completion time
+        for r in done_now:
+            iv = self.inv.pop(r.rid, None)
+            if iv is not None:
+                self.S -= iv[1]
+                self.T -= min(r.decoded * iv[0], 1.0) * iv[1]
+
+    def penalty(self) -> float:
+        if self.vec:
+            pool = self.cluster.pool
+            ep = self.cluster.ep
+            return float(pool.bk_t[ep] - pool.bk_s[ep])
+        return self.T - self.S
+
+
 class RoutingEnv:
     """One router action per dt tick (the paper's 0.02 s cadence).
 
@@ -256,23 +328,10 @@ class RoutingEnv:
         self._vec = getattr(self.cluster, "is_vec", False)
         self.pending = sorted(requests, key=lambda r: r.arrival)
         self.n_total = len(self.pending)
-        # Incremental backlog penalty (Eq. 3 term 1).  The penalty is
-        #   -sum_unfinished (1 - frac_r) / t_hat_r
-        # with d-hat/t-hat fixed per request; instead of rescanning every
-        # arrived request every 0.02 s tick (which dominated episode wall
-        # time), we maintain S = sum 1/t_hat and T = sum frac/t_hat via
-        # arrival/decode/preempt/finish events and read pen = T - S in
-        # O(1).  On the Python stepper the decode/preempt events come
-        # from SimInstance hooks; the vec backend maintains the same
-        # accumulators inside its fused round loop.
-        self._S = 0.0
-        self._T = 0.0
-        self._inv: Dict[int, tuple] = {}     # rid -> (1/d_hat, 1/t_hat)
+        # Incremental backlog penalty (Eq. 3 term 1): see BacklogTracker.
+        self._bk = BacklogTracker(self.cluster, self.profile,
+                                  self.predict_decode)
         self._score_cache = None
-        if not self._vec:
-            for inst in self.cluster.instances:
-                inst.on_token = self._on_token
-                inst.on_preempt = self._on_preempt
         self._i = 0
         self._deliver()
         return self._state()
@@ -282,41 +341,11 @@ class RoutingEnv:
                and self.pending[self._i].arrival <= self.cluster.t):
             r = self.pending[self._i]
             self.cluster.enqueue(r)
-            d_hat = max(self.predict_decode(r), 1)
-            inv_t = 1.0 / max(
-                self.profile.request_time(r.prompt_tokens, d_hat), 1e-3)
-            if self._vec:
-                self.cluster.pool.set_backlog_terms(
-                    self.cluster.gid_of(r), self.cluster.ep, d_hat,
-                    inv_t)
-            else:
-                self._inv[r.rid] = (1.0 / d_hat, inv_t)
-                self._S += inv_t
+            self._bk.register(r)
             self._i += 1
 
-    def _on_token(self, r):
-        iv = self._inv.get(r.rid)
-        if iv is None:
-            return
-        f0 = (r.decoded - 1) * iv[0]
-        if f0 >= 1.0:                 # progress already capped at 1
-            return
-        self._T += (min(r.decoded * iv[0], 1.0) - f0) * iv[1]
-
-    def _on_preempt(self, r):
-        # called BEFORE reset_progress: r still holds its progress
-        iv = self._inv.get(r.rid)
-        if iv is not None and r.decoded:
-            self._T -= min(r.decoded * iv[0], 1.0) * iv[1]
-
     def _note_finished(self, done_now):
-        if self._vec:
-            return            # the pool settles S/T at completion time
-        for r in done_now:
-            iv = self._inv.pop(r.rid, None)
-            if iv is not None:
-                self._S -= iv[1]
-                self._T -= min(r.decoded * iv[0], 1.0) * iv[1]
+        self._bk.note_finished(done_now)
 
     def _state(self) -> np.ndarray:
         return state_lib.featurize(
@@ -358,11 +387,7 @@ class RoutingEnv:
                                     self.cfg.defer_prior_bias)
 
     def _backlog_penalty(self) -> float:
-        if self._vec:
-            pool = self.cluster.pool
-            ep = self.cluster.ep
-            return float(pool.bk_t[ep] - pool.bk_s[ep])
-        return self._T - self._S
+        return self._bk.penalty()
 
     def _apply_action(self, action: int, guide_w: float = 0.0) -> float:
         """Apply one routing decision (SLA watchdog included); returns
@@ -513,6 +538,42 @@ def guidance_weight(cfg: RouterConfig, episode: int) -> float:
     return cfg.gamma * float(np.exp(-cfg.beta_d * episode))
 
 
+class NStepAssembler:
+    """Truncated n-step Monte-Carlo return assembly (RouterConfig.nstep):
+    every decision's span reward is appended to all open windows, and a
+    window that has collected ``nstep`` rewards matures into a training
+    tuple (s0, a0, discounted return).  Shared by the offline ``train``
+    loop and the online gateway trainer (training.online) so both emit
+    identical targets for identical decision/reward streams."""
+
+    def __init__(self, nstep: int, gamma: float):
+        self.nstep = nstep
+        self.g = gamma
+        self.window: deque = deque()
+
+    def add(self, s, a: int, r: float):
+        """Record one decision + its span reward; returns the (0 or 1)
+        matured (s0, a0, ret) tuples this decision flushed."""
+        for _, _, rs in self.window:
+            rs.append(r)
+        self.window.append((s, a, [r]))
+        if len(self.window) > self.nstep:
+            return (self._pop(),)
+        return ()
+
+    def _pop(self):
+        s0, a0, rs = self.window.popleft()
+        ret = 0.0
+        for i, ri in enumerate(rs):
+            ret += (self.g ** i) * ri
+        return s0, a0, ret
+
+    def drain(self):
+        """Flush every open window (episode / stream end)."""
+        while self.window:
+            yield self._pop()
+
+
 def train(cfg: RouterConfig, profile: HardwareProfile,
           workload_fn: Callable[[int], Sequence[Request]],
           n_episodes: int, agent: Optional[DQNAgent] = None,
@@ -552,16 +613,7 @@ def train(cfg: RouterConfig, profile: HardwareProfile,
             if cfg.variant == "guided" else 0.0
         scale = 1.0 if cfg.potential_shaping else cfg.reward_scale
         ep_reward, ticks, done = 0.0, 0, False
-        window: deque = deque()          # n-step return assembly
-        g = cfg.nstep_gamma
-
-        def flush_one():
-            s0, a0, rs = window.popleft()
-            ret = 0.0
-            for i, ri in enumerate(rs):
-                ret += (g ** i) * ri
-            agent.observe(s0, a0, ret, s, 1.0, env.mask())
-
+        asm = NStepAssembler(cfg.nstep, cfg.nstep_gamma)
         while not done:
             mask = env.mask()
             prior = w_sel * env.guidance_bonus() if w_sel else None
@@ -569,11 +621,11 @@ def train(cfg: RouterConfig, profile: HardwareProfile,
                           q_squash=cfg.q_squash if w_sel else 0.0)
             s2, r, done, _ = env.step(a, guide_w=w_k)
             if cfg.nstep > 0:
-                for _, _, rs in window:
-                    rs.append(r / scale)
-                window.append((s, a, [r / scale]))
-                if len(window) > cfg.nstep:
-                    flush_one()
+                # NOTE: matured windows bootstrap on the PRE-step state +
+                # post-step mask; both are dead values under done=1.0 MC
+                # targets (kept for byte-stable replay rows).
+                for s0, a0, ret in asm.add(s, a, r / scale):
+                    agent.observe(s0, a0, ret, s, 1.0, env.mask())
             else:
                 agent.observe(s, a, r / scale, s2, float(done), env.mask())
             if ticks % cfg.learn_every == 0:
@@ -581,8 +633,8 @@ def train(cfg: RouterConfig, profile: HardwareProfile,
             s = s2
             ep_reward += r
             ticks += 1
-        while window:
-            flush_one()
+        for s0, a0, ret in asm.drain():
+            agent.observe(s0, a0, ret, s, 1.0, env.mask())
         stats = summarize(requests)
         stats.update({"episode": ep, "reward": ep_reward, "ticks": ticks,
                       "epsilon": eps, "guide_w": w_k})

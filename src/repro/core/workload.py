@@ -459,6 +459,117 @@ def scenario_stream(base_seed: int = 0, **kw) -> Callable[[int], Scenario]:
     return fn
 
 
+# -- nonstationary drift scenarios (online / continual learning) -------------
+
+# pre-flip: chat-dominated short-prompt traffic
+DRIFT_PRE_TENANTS = {
+    "chat": (0.70, ("qna", "translation")),
+    "batch": (0.20, ("sentiment", "in_context_qna")),
+    "misc": (0.10, None),
+}
+# post-flip: the chat tenant collapses, a NEW ingest tenant (tenant
+# churn) floods heavy long-prompt analytics work
+DRIFT_POST_TENANTS = {
+    "batch": (0.55, ("sentiment", "in_context_qna")),
+    "ingest": (0.35, ("in_context_qna", "sentiment")),
+    "misc": (0.10, ("qna",)),
+}
+
+
+def make_drift_scenario(seed: int,
+                        n_requests: int = 600,
+                        rate: float = 16.0,
+                        flip_frac: float = 0.5,
+                        pattern: str = "poisson",
+                        profiles: Sequence[HardwareProfile] = (
+                            V100_LLAMA2_7B,) * 4,
+                        pre_tenants: Optional[dict] = None,
+                        post_tenants: Optional[dict] = None,
+                        chaos: object = "auto",
+                        straggler_instance: int = 0,
+                        straggler_factor: float = 4.0,
+                        crash_instance: Optional[int] = 1,
+                        restart_after: float = 12.0,
+                        **arrival_kw) -> Scenario:
+    """Nonstationarity stress scenario: ONE arrival stream whose
+    generating distribution flips mid-flight.
+
+    At request ``int(n_requests * flip_frac)`` the tenant mix switches
+    from ``pre_tenants`` (chat-dominated, short prompts) to
+    ``post_tenants`` (a new heavy ``ingest`` tenant -- workload-mix flip
+    AND tenant churn in one event).  With ``chaos="auto"`` the flip also
+    carries infrastructure drift, built on the existing fault-injection
+    hooks: a persistent straggler (``straggler_factor`` x slower decode)
+    on one instance from the flip onward, and a crash/restart on
+    another shortly after.  Pass ``chaos=None`` for a pure workload
+    flip, or an explicit ``FaultSchedule``.
+
+    Everything is drawn from ``seed`` (deterministic: same seed, same
+    stream, same faults).  ``meta`` carries ``flip_time`` /
+    ``flip_index`` so benchmarks can score pre- and post-flip windows
+    separately, and the schedule under ``meta["chaos"]`` is what
+    ``GatewayConfig(chaos=...)`` consumes.  A frozen offline policy
+    trained on the pre-flip mix provably degrades here; an online
+    learner adapts (benchmarks/bench_online_drift.py gates exactly
+    that)."""
+    profiles = tuple(profiles)
+    rng = np.random.default_rng(seed)
+    times = arrival_times(n_requests, rate, pattern, seed=seed + 3,
+                          **arrival_kw)
+    n_pre = int(np.clip(int(n_requests * flip_frac), 0, n_requests))
+    flip_time = float(times[n_pre]) if n_pre < n_requests \
+        else float(times[-1])
+    budget = int(min(p.capacity_tokens for p in profiles) * 0.95)
+    segments = ((dict(pre_tenants or DRIFT_PRE_TENANTS), 0, n_pre),
+                (dict(post_tenants or DRIFT_POST_TENANTS), n_pre,
+                 n_requests))
+    reqs: List[Request] = []
+    samples: List[Sample] = []
+    for si, (tenants, lo, hi) in enumerate(segments):
+        if hi <= lo:
+            continue
+        names = sorted(tenants)
+        w = np.array([tenants[t][0] for t in names], float)
+        w /= w.sum()
+        assign = rng.choice(len(names), size=hi - lo, p=w)
+        pools = {}
+        for k, t in enumerate(names):
+            count = int(np.sum(assign == k))
+            pools[t] = list(reversed(generate(
+                count, seed=seed + 1009 * si + 101 * (k + 1),
+                tasks=tenants[t][1])))
+        for k, at in zip(assign, times[lo:hi]):
+            t = names[k]
+            s = pools[t].pop()
+            d = min(s.decode_tokens, max(budget - s.prompt_tokens, 1))
+            reqs.append(Request(prompt_tokens=s.prompt_tokens,
+                                decode_tokens=d, arrival=float(at),
+                                task=s.task, tenant=t))
+            samples.append(s)
+    schedule = chaos
+    if chaos == "auto":
+        # deferred import: core must stay importable without serving
+        from repro.serving.chaos import Crash, FaultSchedule, Straggler
+        horizon = float(times[-1]) + 120.0
+        stragglers = (Straggler(flip_time, horizon,
+                                straggler_instance % len(profiles),
+                                straggler_factor),)
+        crashes = ()
+        if crash_instance is not None:
+            crashes = (Crash(flip_time + 0.1 * (horizon - flip_time),
+                             crash_instance % len(profiles),
+                             restart_after),)
+        schedule = FaultSchedule(crashes=crashes, stragglers=stragglers)
+    return Scenario(requests=reqs, profiles=profiles,
+                    name=f"drift{seed}-{pattern}", pattern=pattern,
+                    rate=rate, seed=seed,
+                    meta={"flip_time": flip_time, "flip_index": n_pre,
+                          "chaos": schedule,
+                          "pre_tenants": sorted(segments[0][0]),
+                          "post_tenants": sorted(segments[1][0])},
+                    samples=samples)
+
+
 def generate_trace(n: int, seed: int = 0) -> List[Sample]:
     rng = np.random.default_rng(seed)
     apps = list(_TRACE_SPEC)

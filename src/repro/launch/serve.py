@@ -21,6 +21,13 @@ instances or the calibrated simulator.
       --chaos-seed 7 --chaos-crashes 1 --chaos-stragglers 1 \
       --failover --hedge-after 4.0
 
+  # ONLINE continual learning: the gateway trains its own router on the
+  # live stream (training.online) with the r_mixing safe-fallback
+  # guardrail; --drift serves the nonstationary mix-flip scenario where
+  # a frozen policy degrades.  --checkpoint warm-starts the learner.
+  PYTHONPATH=src python -m repro.launch.serve --mode gateway \
+      --online --guardrail 0.12 --drift --checkpoint ckpt_dir
+
   # calibrate a HardwareProfile from the real engine (core.calibrate):
   # sweep + fit, print diagnostics, write a committable JSON artifact.
   # --min-r2 makes a loose fit a non-zero exit (CI calibration-smoke).
@@ -77,6 +84,8 @@ from repro.serving.scheduler import get_scheduler
 
 
 def _router_cfg(args) -> rl.RouterConfig:
+    # the online learner gets the health features: under chaos they
+    # carry the straggler/degradation signal it adapts to
     return rl.RouterConfig(variant="guided", n_instances=args.instances,
                            q_arch="decomposed", seed=0,
                            explore_episodes=max(args.train_episodes - 3,
@@ -88,7 +97,9 @@ def _router_cfg(args) -> rl.RouterConfig:
                            cache_weight=(0.5 if args.prefix_cache
                                          else 0.0),
                            include_cache_features=bool(
-                               args.prefix_cache))
+                               args.prefix_cache),
+                           include_health_features=bool(
+                               getattr(args, "online", False)))
 
 
 def _train_quick_agent(args, cfg: rl.RouterConfig, profile=None):
@@ -208,10 +219,15 @@ def serve_gateway(args):
                          max_retries=args.max_retries,
                          hedge_after_s=args.hedge_after)
     recorder = None
+    trainer = None
     if args.trace:
         from repro.serving import trace as trace_lib
         recorder = trace_lib.TraceRecorder(sample=args.trace_sample)
     if args.backend == "engine":
+        if args.online:
+            raise SystemExit("--online needs a simulator backend "
+                             "(py/vec): the engine adapter fires no "
+                             "decode events for the backlog reward)")
         # tiny real engines: short random prompts, oracle-free routing
         # via the mixing heuristic (no content for the predictor)
         engines = _tiny_engines(args)
@@ -242,14 +258,37 @@ def serve_gateway(args):
         profiles = (base,) * args.instances
         sessions = (wl.SessionConfig(block=args.prefix_block)
                     if args.sessions else None)
-        scn = wl.make_tenant_scenario(seed=7, n_requests=args.requests,
-                                      rate=args.rate,
-                                      pattern=args.pattern,
-                                      profiles=profiles,
-                                      sessions=sessions)
+        if args.drift:
+            scn = wl.make_drift_scenario(seed=7,
+                                         n_requests=args.requests,
+                                         rate=args.rate,
+                                         pattern=args.pattern,
+                                         profiles=profiles)
+            if chaos is None and scn.meta["chaos"] is not None:
+                chaos = scn.meta["chaos"]
+                gcfg = dataclasses.replace(gcfg, chaos=chaos,
+                                           failover=True)
+        else:
+            scn = wl.make_tenant_scenario(seed=7,
+                                          n_requests=args.requests,
+                                          rate=args.rate,
+                                          pattern=args.pattern,
+                                          profiles=profiles,
+                                          sessions=sessions)
         length = MicroBatchPredictor(quick_bucket_predictor(
             base, n_train=2000, epochs=2))
-        if args.policy == "rl":
+        if args.online:
+            from repro.training.online import OnlineConfig, OnlineTrainer
+            ocfg = OnlineConfig(eps=args.online_eps,
+                                guard=args.guardrail > 0,
+                                guard_regret=args.guardrail,
+                                warm_start=args.checkpoint,
+                                checkpoint_dir=args.save_learner,
+                                checkpoint_every=(500 if args.save_learner
+                                                  else 0))
+            trainer = OnlineTrainer(cfg, ocfg, m=args.instances)
+            policy = trainer.policy
+        elif args.policy == "rl":
             if args.checkpoint:
                 policy = restore_rl_policy(cfg, args.checkpoint,
                                            m=args.instances)
@@ -276,6 +315,15 @@ def serve_gateway(args):
         print(f"chaos: orphaned={stats['orphaned']} "
               f"retried={stats['retried']} hedged={stats['hedged']} "
               f"breaker_trips={stats.get('breaker_trips', 0)}")
+    if trainer is not None:
+        t = trainer.telemetry()
+        print(f"online: decisions={int(t['decisions'])} "
+              f"transitions={int(t['transitions'])} "
+              f"learner_steps={trainer.agent.steps} "
+              f"publishes={int(t['publishes'])} "
+              f"explored={int(t['explored'])} "
+              f"fallback_entries={int(t['fallback_entries'])} "
+              f"mode={t['mode']}")
     print(format_snapshot(stats["snapshot"]))
     if args.trace or args.metrics_out:
         from repro.serving import obs
@@ -360,7 +408,33 @@ def main():
                     "share system prompts) instead of independent "
                     "queries")
     ap.add_argument("--checkpoint", default=None,
-                    help="router checkpoint dir for --policy rl")
+                    help="router checkpoint dir for --policy rl (and "
+                    "the warm-start source for --online)")
+    ap.add_argument("--online", action="store_true",
+                    help="gateway: continual learning on the live "
+                    "stream (training.online) -- the router trains on "
+                    "its own transitions between arrival windows and "
+                    "hot-swaps refreshed weights without pausing "
+                    "admission; implies the RL policy with health "
+                    "features")
+    ap.add_argument("--guardrail", type=float, default=0.12,
+                    metavar="REGRET",
+                    help="--online safe fallback: when the Q-head's "
+                    "mean r_mixing regret over the guard window "
+                    "exceeds this, route by r_mixing for a cooldown "
+                    "while learning continues (0 = guardrail off)")
+    ap.add_argument("--online-eps", type=float, default=0.05,
+                    help="--online guided exploration rate (softmax "
+                    "over the r_mixing guidance bonus)")
+    ap.add_argument("--drift", action="store_true",
+                    help="gateway: serve the nonstationary drift "
+                    "scenario (mid-stream workload-mix flip + tenant "
+                    "churn + straggler/crash chaos) instead of the "
+                    "stationary tenant mix")
+    ap.add_argument("--save-learner", default=None, metavar="DIR",
+                    help="--online: periodically checkpoint the FULL "
+                    "learner state (Q + target + optimizer + replay) "
+                    "here for exact mid-stream resume")
     ap.add_argument("--chaos-seed", type=int, default=None,
                     help="gateway: inject a seeded FaultSchedule "
                     "(serving.chaos) of crashes / stragglers / tenant "

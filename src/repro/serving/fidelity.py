@@ -77,6 +77,15 @@ class FidelityConfig:
     sessions: bool = False
     prefix_cache_tokens: int = 0
     prefix_block: int = 16
+    # saturating stream: arrivals land in back-to-back bursts of
+    # ~2*n_slots ladder-top prompts with high-biased decodes, so the
+    # resident KV footprint overflows ``capacity_tokens`` and every
+    # backend must preempt and queue.  This makes the PREEMPTION path
+    # part of the fidelity surface: the report gains per-pair
+    # preemption deltas and ``bench_fidelity`` gates that sim and
+    # engine preempt alike, not just that their latencies match when
+    # nothing contends.
+    saturate: bool = False
 
 
 def serving_profile(profile: HardwareProfile,
@@ -97,6 +106,26 @@ def make_stream(fcfg: FidelityConfig) -> List[tuple]:
     per-block (prefix_hashes, full_hashes) chains of a growing
     multi-turn conversation."""
     rng = np.random.default_rng(fcfg.seed)
+    if fcfg.saturate:
+        # bursts of 2*n_slots simultaneous ladder-top requests: with
+        # high-biased decodes the per-request peak KV footprint times
+        # n_slots residents exceeds the profile budget, so backends
+        # must preempt (and the overflow half of each burst queues)
+        g = max(2 * fcfg.n_slots, 2)
+        n_groups = -(-fcfg.n_requests // g)
+        group_t = np.cumsum(rng.exponential(g / fcfg.rate,
+                                            size=n_groups))
+        p_top = int(max(fcfg.prompt_lengths))
+        lo, hi = fcfg.decode_range
+        d_lo = max(lo, hi - max((hi - lo) // 4, 1))
+        out = []
+        for gi in range(n_groups):
+            for j in range(g):
+                if len(out) >= fcfg.n_requests:
+                    break
+                d = int(rng.integers(d_lo, hi + 1))
+                out.append((p_top, d, float(group_t[gi]) + j * 1e-3))
+        return out
     if not fcfg.sessions:
         gaps = rng.exponential(1.0 / fcfg.rate, size=fcfg.n_requests)
         arrivals = np.cumsum(gaps)
@@ -227,6 +256,10 @@ def _deltas(a: Dict, b: Dict, quantiles: Sequence[float]) -> Dict:
                 md[key] = {"abs": vb - va,
                            "rel": (vb - va) / va if va else None}
         out[m] = md
+    # preemption fidelity: do both backends preempt, and comparably?
+    pa, pb = a["preemptions"], b["preemptions"]
+    out["preemptions"] = {"a": pa, "b": pb, "abs": pb - pa,
+                          "both_preempt": bool(pa > 0 and pb > 0)}
     return out
 
 

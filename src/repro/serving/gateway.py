@@ -422,6 +422,11 @@ class Gateway:
         self._inflight: Dict[int, Tuple[Request, float]] = {}
         self.orphaned = 0
         self.hedged = 0
+        # stateful policies (the online trainer) may attach to the
+        # gateway: ``bind`` runs once, before any tick
+        bind = getattr(policy, "bind", None)
+        if bind is not None:
+            bind(self)
 
     # -- admission / backpressure --------------------------------------
     def _queue_full(self) -> bool:
@@ -742,6 +747,12 @@ class Gateway:
                 a = int(np.argmax(scores))
                 deferred = False
                 forced = True
+                on_forced = getattr(self.policy, "on_forced", None)
+                if on_forced is not None:
+                    # the online trainer charges the watchdog's
+                    # sla_penalty to the deferring decision (RoutingEnv
+                    # reward parity)
+                    on_forced(int(a))
             if deferred:
                 return
             self._q_tenant[head.tenant] -= 1
@@ -808,6 +819,11 @@ class Gateway:
         tr = self.trace
         i, n = 0, len(stream)
         track_health = self.health is not None
+        # stateful-policy tick hooks (the online trainer): resolved once
+        # -- None for every stock policy, so the loop pays one branch
+        on_pre_route = getattr(self.policy, "on_pre_route", None)
+        on_tick = getattr(self.policy, "on_tick", None)
+        on_run_end = getattr(self.policy, "on_run_end", None)
         while True:
             self._apply_chaos()
             self._update_health()
@@ -826,13 +842,21 @@ class Gateway:
                             {"prompt": int(req.prompt_tokens)})
                 self._admit(req)
             self._hedge_stuck()
+            if on_pre_route is not None:
+                # every request enqueued this tick (arrivals, drained
+                # overflow, retries, hedge requeues) is still in
+                # cluster.central here
+                on_pre_route(cluster)
             self._route_some()
-            for r in cluster.advance():
+            done_now = cluster.advance()
+            for r in done_now:
                 if self._inflight:
                     self._inflight.pop(r.rid, None)
                 if track_health and r.instance is not None:
                     self.health.on_complete(int(r.instance), r)
                 self.metrics.on_complete(r, r.tenant)
+            if on_tick is not None:
+                on_tick(cluster, done_now)
             self._drain_overflow()
             self._maybe_scale_up()
             if tr.enabled and (cluster.t - self._last_counter
@@ -844,6 +868,8 @@ class Gateway:
                 break
             if cluster.t > cfg.max_time:
                 break
+        if on_run_end is not None:
+            on_run_end()
         if getattr(cluster, "is_vec", False):
             cluster.sync_all()   # in-flight requests on truncated runs
             for r in self.shed:

@@ -197,6 +197,20 @@ class RLPolicy:
         self.agent = agent
         self.cfg = router_cfg
 
+    def hot_swap(self, params, target=None):
+        """Atomically publish refreshed Q weights onto the served agent.
+
+        Each swap is a single attribute rebinding (one reference store,
+        atomic under the GIL) of an immutable param tree: a concurrent
+        ``route`` reads ``self.agent.params`` exactly once per decision
+        and sees either the old or the new tree in full -- never a torn
+        mix of layers (pinned by tests/test_online.py).  The online
+        trainer calls this between arrival windows; admission never
+        pauses."""
+        self.agent.params = params
+        if target is not None:
+            self.agent.target = target
+
     def route(self, cluster, req, d_hat: int) -> Optional[int]:
         cfg = self.cfg
         mask = state_lib.action_mask(cluster)

@@ -206,3 +206,47 @@ class CheckpointManager:
                     zlib.error, _decompress_error()):
                 continue
         return None
+
+
+# -- full learner round-trips (online trainer warm-start / resume) --------
+
+def save_learner(directory: str, step: int, agent, keep: int = 3):
+    """Checkpoint the FULL learner state (Q + target + optimizer +
+    replay-buffer contents + centering EMA + RNG) so an online trainer
+    can resume mid-stream bit-exactly.  Synchronous: when this returns
+    the checkpoint is durable."""
+    tree, extra = agent.full_state()
+    mgr = CheckpointManager(directory, keep=keep)
+    try:
+        mgr.save(step, tree, extra, sync=True)
+    finally:
+        mgr.close()
+
+
+def restore_learner(directory: str, agent) -> Optional[int]:
+    """Restore ``agent`` from ``directory``; returns the checkpoint step
+    or None if nothing intact was found.
+
+    Accepts two artifact flavors: a FULL learner checkpoint
+    (``save_learner``) restores everything for exact mid-stream resume;
+    a params-only ``state_dict`` artifact (the offline trainers'
+    format) warm-starts just the networks + optimizer -- the replay
+    buffer and RNG stay fresh."""
+    if not os.path.isdir(directory):
+        return None
+    mgr = CheckpointManager(directory)
+    try:
+        full_like, _ = agent.full_state()
+        out = mgr.restore(full_like)
+        if out is not None:
+            tree, extra = out
+            agent.load_full_state(tree, extra)
+            return int(extra.get("step", 0))
+        out = mgr.restore(agent.state_dict())
+        if out is not None:
+            tree, extra = out
+            agent.load_state_dict(tree)
+            return int(extra.get("step", 0))
+        return None
+    finally:
+        mgr.close()
